@@ -1,0 +1,149 @@
+"""Table 5 — accuracy parity.
+
+Sine predictor: trained for real (examples/train_sine trains the same MLP);
+MSE/RMSE against the noisy-sine test protocol (1000 samples, U(-0.1, 0.1)
+noise). Speech / person: classifier agreement + precision/recall/F1 of the
+int8 engines against the fp32 oracle's labels (we cannot download the TFLM
+checkpoints offline — DESIGN.md §4 — so the fp32 model defines the task).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompiledModel, Interpreter
+from repro.core.quantize import quantize_graph
+
+from .common import csv_line
+
+
+def train_sine_weights(steps: int = 4000, seed: int = 0):
+    """Train the paper's 1-16-16-1 ReLU MLP on sin(x) (AdamW, seconds).
+    First-layer biases place the ReLU knots across [0, 2π]."""
+    import jax
+    import jax.numpy as jnp
+    from repro.optim import adamw
+
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    w1 = jax.random.normal(ks[0], (1, 16))
+    knots = jnp.linspace(0.0, 2 * np.pi, 16)[None]
+    params = {
+        "l0": {"w": w1, "b": (-w1 * knots)[0]},
+        "l1": {"w": jax.random.normal(ks[1], (16, 16)) * 0.3,
+               "b": jnp.zeros(16)},
+        "l2": {"w": jax.random.normal(ks[2], (16, 1)) * 0.3,
+               "b": jnp.zeros(1)},
+    }
+
+    def fwd(p, x):
+        h = jnp.maximum(x @ p["l0"]["w"] + p["l0"]["b"], 0)
+        h = jnp.maximum(h @ p["l1"]["w"] + p["l1"]["b"], 0)
+        return h @ p["l2"]["w"] + p["l2"]["b"]
+
+    opt_cfg = adamw.AdamWConfig(lr=5e-3, weight_decay=0.0, warmup_steps=50,
+                                total_steps=steps, grad_clip=10.0)
+    state = adamw.init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(p, s, x, y):
+        grads = jax.grad(
+            lambda pp: jnp.mean((fwd(pp, x) - y) ** 2))(p)
+        return adamw.update(opt_cfg, grads, s, p)
+
+    for _ in range(steps):
+        x = rng.uniform(0, 2 * np.pi, (128, 1)).astype("f")
+        params, state, _ = step(params, state, x, np.sin(x))
+    return [(np.asarray(params[k]["w"]), np.asarray(params[k]["b"]))
+            for k in ("l0", "l1", "l2")]
+
+
+def sine_metrics(seed: int = 1):
+    """Table 5 left: MSE / RMSE for fp32-interp, int8-interp, int8-compiled."""
+    from repro.configs.paper_models import build_sine
+    weights = train_sine_weights()
+    g = build_sine(weights, batch=1000)
+    rng = np.random.default_rng(seed)
+    xs = rng.uniform(0, 2 * np.pi, (1000, 1)).astype("f")
+    target = np.sin(xs) + rng.uniform(-0.1, 0.1, (1000, 1)).astype("f")
+    rep = [rng.uniform(0, 2 * np.pi, (1000, 1)).astype("f")
+           for _ in range(3)]
+    qg = quantize_graph(g, rep)
+
+    out = {}
+    out["float"] = np.asarray(Interpreter(g).invoke(xs))
+    out["int8_interp"] = np.asarray(Interpreter(qg).invoke(xs))
+    out["int8_compiled"] = np.asarray(CompiledModel(qg).predict(xs))
+    res = {}
+    for k, y in out.items():
+        mse = float(np.mean((y - target) ** 2))
+        res[k] = {"mse": mse, "rmse": float(np.sqrt(mse))}
+    res["engines_equal"] = bool(
+        np.array_equal(out["int8_interp"], out["int8_compiled"]))
+    return res
+
+
+def classifier_metrics(name: str, n_eval: int = 200):
+    """Table 5 middle/right protocol: precision / recall / F1 of each int8
+    engine against the fp32 oracle labels."""
+    from .common import paper_models
+    models = paper_models(batch=1)[name]
+    g, qg, gen = models["float"], models["int8"], models["gen"]
+    f_i = Interpreter(g)
+    q_i = Interpreter(qg)
+    q_c = CompiledModel(qg)
+
+    y_true, y_qi, y_qc = [], [], []
+    for _ in range(n_eval):
+        x = gen()
+        y_true.append(int(np.argmax(f_i.invoke(x))))
+        y_qi.append(int(np.argmax(q_i.invoke(x))))
+        y_qc.append(int(np.argmax(q_c.predict(x))))
+    y_true, y_qi, y_qc = map(np.asarray, (y_true, y_qi, y_qc))
+
+    def prf(pred):
+        classes = np.unique(y_true)
+        ps, rs = [], []
+        for c in classes:
+            tp = ((pred == c) & (y_true == c)).sum()
+            fp = ((pred == c) & (y_true != c)).sum()
+            fn = ((pred != c) & (y_true == c)).sum()
+            ps.append(tp / max(tp + fp, 1))
+            rs.append(tp / max(tp + fn, 1))
+        p, r = float(np.mean(ps)), float(np.mean(rs))
+        f1 = 2 * p * r / max(p + r, 1e-9)
+        return {"precision": p, "recall": r, "f1": f1,
+                "agreement": float((pred == y_true).mean())}
+
+    return {"int8_interp": prf(y_qi), "int8_compiled": prf(y_qc),
+            "engines_equal": bool((y_qi == y_qc).all())}
+
+
+def main(fast: bool = False):
+    lines = []
+    res = sine_metrics()
+    lines.append(csv_line(
+        "accuracy/sine_mse_fp32", 0.0, f"{res['float']['mse']:.4f}"))
+    lines.append(csv_line(
+        "accuracy/sine_mse_int8", 0.0, f"{res['int8_compiled']['mse']:.4f}"))
+    lines.append(csv_line(
+        "accuracy/sine_rmse_int8", 0.0,
+        f"{res['int8_compiled']['rmse']:.4f}"))
+    lines.append(csv_line(
+        "accuracy/sine_engines_equal", 0.0, str(res["engines_equal"])))
+    n = 40 if fast else 200
+    for model in ("speech", "person"):
+        r = classifier_metrics(model, n_eval=n)
+        c = r["int8_compiled"]
+        lines.append(csv_line(
+            f"accuracy/{model}_f1_int8", 0.0, f"{c['f1']:.4f}"))
+        lines.append(csv_line(
+            f"accuracy/{model}_agreement_vs_fp32", 0.0,
+            f"{c['agreement']:.4f}"))
+        lines.append(csv_line(
+            f"accuracy/{model}_engines_equal", 0.0, str(r["engines_equal"])))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Table 6 — energy consumption (DERIVED, not measured).
+
+The paper itself observes (Sec. 6.2.4) that average power is engine-
+independent, so energy ∝ execution time × device power. We cannot measure
+power in this container; we therefore report the paper's own model applied
+to our measured execution times, with the nominal power of the two MCUs the
+paper used for this table. Labeled derived throughout (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompiledModel, Interpreter
+
+from .common import csv_line, median_time_us, paper_models
+
+# Nominal active power (W) — datasheet-order-of-magnitude constants for the
+# two MCUs the paper's Table 6 covers.
+DEVICE_POWER_W = {"esp32": 0.80, "nrf52840": 0.05}
+
+
+def main(fast: bool = False):
+    iters = 10 if fast else 50
+    lines = []
+    models = paper_models(batch=1)
+    for name, m in models.items():
+        qg, gen = m["int8"], m["gen"]
+        qx = np.asarray(qg.tensor(qg.inputs[0]).qparams.quantize(gen()))
+        interp = Interpreter(qg)
+        cm = CompiledModel(qg)
+        cm.compile()
+        us_i, *_ = median_time_us(lambda: interp.invoke_q(qx), iters=iters)
+        us_c, *_ = median_time_us(lambda: np.asarray(cm.predict_q(qx)),
+                                  iters=iters)
+        for dev, watts in DEVICE_POWER_W.items():
+            # energy per inference in microwatt-hours: W * s / 3600 * 1e6
+            e_i = watts * (us_i / 1e6) / 3600 * 1e6
+            e_c = watts * (us_c / 1e6) / 3600 * 1e6
+            lines.append(csv_line(
+                f"energy/{name}_{dev}_interp_uWh", 0.0,
+                f"{e_i:.5f} (derived: P*t)"))
+            lines.append(csv_line(
+                f"energy/{name}_{dev}_compiled_uWh", 0.0,
+                f"{e_c:.5f} (derived: P*t)"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

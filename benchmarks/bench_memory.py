@@ -1,0 +1,51 @@
+"""Figs. 9/10 — memory usage per engine.
+
+Interpreter (TFLM architecture): weights + arena (persists the whole
+inference) + runtime structures.
+Compiled (MicroFlow): weights + folded constants + transient stack peak
+(zero residual after inference).
+The byte-exact planner numbers are the RAM columns; XLA's own
+memory_analysis of the compiled executable is reported alongside.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompiledModel
+from repro.core.memory import memory_report, plan_paged
+
+from .common import csv_line, paper_models
+
+
+def main(fast: bool = False):
+    lines = []
+    models = paper_models(batch=1)
+    for name, m in models.items():
+        qg = m["int8"]
+        rep = memory_report(qg)
+        # Fig 9/10 "Flash": weights + code; "RAM": arena vs stack peak
+        lines.append(csv_line(
+            f"memory/{name}_weights_kB", 0.0,
+            f"{rep.weight_bytes/1024:.2f}"))
+        lines.append(csv_line(
+            f"memory/{name}_interp_arena_kB", 0.0,
+            f"{rep.arena_bytes/1024:.2f}"))
+        lines.append(csv_line(
+            f"memory/{name}_compiled_stack_peak_kB", 0.0,
+            f"{rep.stack_peak_bytes/1024:.2f}"))
+        lines.append(csv_line(
+            f"memory/{name}_compiled_stack_fused_kB", 0.0,
+            f"{rep.stack_peak_fused/1024:.2f}"))
+        lines.append(csv_line(
+            f"memory/{name}_folded_consts_kB", 0.0,
+            f"{rep.folded_const_bytes/1024:.2f}"))
+        cm = CompiledModel(qg)
+        mem = cm.memory_analysis()
+        lines.append(csv_line(
+            f"memory/{name}_xla_temp_kB", 0.0,
+            f"{mem.temp_size_in_bytes/1024:.2f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Sec. 4.3 / Fig. 6 — paging: RAM ∝ page size, at a latency cost.
+
+Reproduces the paper's ATmega328 numbers byte-exactly (5216 B unpaged →
+163 B with 32 pages for a 32×32 dense layer) and measures the execution-time
+trade on a larger layer through the compiled engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompiledModel
+from repro.core.builder import GraphBuilder
+from repro.core.memory import fc_full_bytes, fc_page_bytes, plan_paged, \
+    plan_stack
+from repro.core.quantize import quantize_graph
+
+from .common import csv_line, median_time_us
+
+
+def _fc_model(n_in=256, n_out=256, batch=4, seed=0):
+    rng = np.random.default_rng(seed)
+    b = GraphBuilder("paged_fc")
+    x = b.input("x", (batch, n_in))
+    y = b.fully_connected(x, rng.normal(0, 0.3, (n_in, n_out)).astype("f"),
+                          rng.normal(size=n_out).astype("f"), fused="RELU")
+    b.output(y)
+    g = b.build()
+    return quantize_graph(
+        g, [rng.normal(size=(batch, n_in)).astype("f") for _ in range(4)]), \
+        rng
+
+
+def main(fast: bool = False):
+    lines = []
+    # the paper's own example numbers
+    lines.append(csv_line("paging/atmega_fc32_full_B", 0.0,
+                          str(fc_full_bytes(32, 32))))
+    lines.append(csv_line("paging/atmega_fc32_paged32_B", 0.0,
+                          str(fc_page_bytes(32, 32, 32))))
+
+    qg, rng = _fc_model()
+    x = rng.normal(size=(4, 256)).astype("f")
+    qx = np.asarray(qg.tensor(qg.inputs[0]).qparams.quantize(x))
+    iters = 20 if fast else 100
+
+    base = CompiledModel(qg)
+    us0, *_ = median_time_us(lambda: np.asarray(base.predict_q(qx)),
+                             iters=iters)
+    peak0 = plan_stack(qg).peak_bytes
+    lines.append(csv_line("paging/fc256_unpaged_us", us0,
+                          f"plan_peak_B={peak0}"))
+    ref = np.asarray(base.predict_q(qx))
+    for n_pages in (2, 8, 32):
+        cm = CompiledModel(qg, paged={0: n_pages})
+        out = np.asarray(cm.predict_q(qx))
+        assert np.array_equal(out, ref), "paging must be bit-identical"
+        us, *_ = median_time_us(lambda: np.asarray(cm.predict_q(qx)),
+                                iters=iters)
+        peak = plan_paged(qg, {0: n_pages}).peak_bytes
+        lines.append(csv_line(
+            f"paging/fc256_pages{n_pages}_us", us,
+            f"plan_peak_B={peak};slowdown={us/us0:.2f}x"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Fig. 11 — inference latency, interpreter vs compiled engine (median of
+100 iterations), plus the Pallas-kernel variant."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompiledModel, Interpreter
+
+from .common import csv_line, median_time_us, paper_models
+
+
+def main(fast: bool = False):
+    iters = 20 if fast else 100
+    lines = []
+    models = paper_models(batch=1)
+    for name, m in models.items():
+        qg, gen = m["int8"], m["gen"]
+        x = gen()
+        qx = np.asarray(qg.tensor(qg.inputs[0]).qparams.quantize(x))
+
+        interp = Interpreter(qg)
+        us_i, lo, hi = median_time_us(lambda: interp.invoke_q(qx),
+                                      iters=iters)
+        lines.append(csv_line(f"runtime/{name}_interpreter_us", us_i,
+                              f"ci95=({lo:.0f},{hi:.0f})"))
+
+        cm = CompiledModel(qg)
+        cm.compile()
+        us_c, lo, hi = median_time_us(
+            lambda: np.asarray(cm.predict_q(qx)), iters=iters)
+        lines.append(csv_line(f"runtime/{name}_compiled_us", us_c,
+                              f"ci95=({lo:.0f},{hi:.0f})"))
+        lines.append(csv_line(f"runtime/{name}_speedup", 0.0,
+                              f"{us_i/us_c:.2f}x"))
+
+        if name == "sine" or not fast:
+            cmp_ = CompiledModel(qg, use_pallas=True)
+            us_p, lo, hi = median_time_us(
+                lambda: np.asarray(cmp_.predict_q(qx)),
+                iters=max(iters // 4, 5))
+            lines.append(csv_line(
+                f"runtime/{name}_compiled_pallas_interp_us", us_p,
+                "pallas interpret=True (CPU validation mode, not perf)"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

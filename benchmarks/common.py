@@ -1,0 +1,50 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def median_time_us(fn, iters: int = 100, warmup: int = 3):
+    """Median wall time per call in microseconds (the paper's Fig. 11
+    protocol: 100 iterations, median + spread)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts = np.asarray(ts)
+    return float(np.median(ts)), float(np.percentile(ts, 2.5)), \
+        float(np.percentile(ts, 97.5))
+
+
+def csv_line(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.2f},{derived}"
+    print(line)
+    return line
+
+
+def paper_models(batch: int = 1):
+    """Quantized versions of the paper's three models + fp32 originals +
+    representative inputs."""
+    from repro.configs.paper_models import build_sine, build_speech, \
+        build_person
+    from repro.core.quantize import quantize_graph
+    rng = np.random.default_rng(0)
+    out = {}
+    specs = {
+        "sine": (build_sine,
+                 lambda: rng.uniform(0, 2 * np.pi, (batch, 1)).astype("f")),
+        "speech": (build_speech,
+                   lambda: rng.normal(0, 1, (batch, 49, 40, 1)).astype("f")),
+        "person": (build_person,
+                   lambda: rng.normal(0, 1, (batch, 96, 96, 1)).astype("f")),
+    }
+    for name, (builder, gen) in specs.items():
+        g = builder(batch=batch) if name == "person" else builder(None, batch)
+        qg = quantize_graph(g, [gen() for _ in range(8)])
+        out[name] = {"float": g, "int8": qg, "gen": gen}
+    return out

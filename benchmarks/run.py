@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV lines. The roofline benchmark
+(which spawns 512-device compiles) runs standalone:
+  PYTHONPATH=src python -m benchmarks.bench_roofline
+run.py includes its cached table when present.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_accuracy, bench_memory, bench_runtime,
+                            bench_paging, bench_energy)
+    benches = {
+        "accuracy": bench_accuracy.main,   # Table 5
+        "memory": bench_memory.main,       # Figs. 9/10
+        "runtime": bench_runtime.main,     # Fig. 11
+        "paging": bench_paging.main,       # Sec. 4.3 / Fig. 6
+        "energy": bench_energy.main,       # Table 6 (derived)
+    }
+    print("name,us_per_call,derived")
+    all_lines = []
+    for name, fn in benches.items():
+        if args.only and name not in args.only:
+            continue
+        t0 = time.time()
+        all_lines += fn(fast=args.fast)
+        print(f"# bench {name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+    roofline = "results/roofline.csv"
+    if os.path.exists(roofline) and (not args.only
+                                     or "roofline" in args.only):
+        print("# roofline (cached from benchmarks.bench_roofline):")
+        with open(roofline) as f:
+            for line in f:
+                print("roofline/" + line.strip() + ",0.0,")
+
+
+if __name__ == "__main__":
+    main()

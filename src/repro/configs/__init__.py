@@ -1,0 +1,2 @@
+from .base import (ArchConfig, InputShape, INPUT_SHAPES, get_config,
+                   list_configs, load_all)  # noqa: F401

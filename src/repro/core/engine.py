@@ -1,0 +1,212 @@
+"""Compiled engine — the MicroFlow counterpart (Sec. 3.3).
+
+The whole graph is translated, ahead of time, into ONE program:
+
+* the per-operator *parser* phase runs here on the host
+  (``preprocess.preprocess_graph``) and bakes the Eq. (4)/(7)/(10) constants
+  into the executable as literals;
+* the operator *kernels* are traced into a single XLA computation and
+  AOT-compiled with ``jax.jit(...).lower().compile()`` — the analogue of the
+  Rust compiler producing the target binary (Fig. 2);
+* memory is assigned statically by XLA's buffer allocator, with operator
+  inputs effectively *owned and dropped* (liveness-based reuse), mirroring
+  Sec. 4.1; the byte-exact plan is reported by ``memory.plan_stack``.
+
+Options:
+  use_pallas  — route quantized FullyConnected through the Pallas MXU kernel
+                (``repro.kernels``), interpret-mode on CPU.
+  paged       — {op_index: n_pages}: execute those FC layers page-by-page
+                (Sec. 4.3), bounding resident weight bytes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import graph as G
+from . import ops_ref as K
+from .memory import memory_report
+from .paging import paged_fc_folded
+from .preprocess import preprocess_graph
+
+
+def build_graph_fn(g: G.Graph, folded: dict, use_pallas: bool = False,
+                   paged: Optional[dict] = None):
+    """Returns fn(*graph_dtype_inputs) -> tuple(graph_dtype_outputs)."""
+    paged = paged or {}
+    if use_pallas:
+        from repro.kernels import ops as pallas_ops
+
+    def fn(*inputs):
+        env = {}
+        for tid, arr in zip(g.inputs, inputs):
+            env[tid] = arr
+
+        def val(tid):
+            t = g.tensor(tid)
+            return jnp.asarray(t.data) if t.is_const else env[tid]
+
+        for i, op in enumerate(g.ops):
+            x_t = g.tensor(op.inputs[0])
+            is_q = x_t.dtype == "int8"
+            x = val(op.inputs[0])
+            fused = op.attrs.get("fused", "NONE")
+
+            if op.op == G.FULLY_CONNECTED:
+                w = val(op.inputs[1])
+                if is_q:
+                    fc = folded[i]
+                    if i in paged:
+                        y = paged_fc_folded(x, w, fc, paged[i], fused)
+                    elif use_pallas:
+                        y = pallas_ops.qmatmul_folded(x, w, fc, fused)
+                    else:
+                        y = K.fully_connected_folded(x, w, fc, fused)
+                else:
+                    b = val(op.inputs[2]) if len(op.inputs) > 2 else None
+                    y = K.fully_connected_f(x, w, b, fused)
+            elif op.op in (G.CONV_2D, G.DEPTHWISE_CONV_2D):
+                w = val(op.inputs[1])
+                stride, padding = op.attrs["stride"], op.attrs["padding"]
+                if is_q:
+                    fc = folded[i]
+                    if op.op == G.CONV_2D:
+                        y = K.conv2d_folded(x, w, fc, stride=stride,
+                                            padding=padding, fused=fused)
+                    elif use_pallas:
+                        y = pallas_ops.qdwconv_folded(x, w, fc, stride=stride,
+                                                      padding=padding,
+                                                      fused=fused)
+                    else:
+                        y = K.depthwise_conv2d_folded(x, w, fc, stride=stride,
+                                                      padding=padding,
+                                                      fused=fused)
+                else:
+                    b = val(op.inputs[2]) if len(op.inputs) > 2 else None
+                    f = (K.conv2d_f if op.op == G.CONV_2D
+                         else K.depthwise_conv2d_f)
+                    y = f(x, w, b, stride=stride, padding=padding, fused=fused)
+            elif op.op in (G.AVERAGE_POOL_2D, G.MAX_POOL_2D):
+                kw = dict(window=op.attrs["window"], stride=op.attrs["stride"],
+                          padding=op.attrs["padding"])
+                qf = (K.average_pool2d_q if op.op == G.AVERAGE_POOL_2D
+                      else K.max_pool2d_q)
+                ff = (K.average_pool2d_f if op.op == G.AVERAGE_POOL_2D
+                      else K.max_pool2d_f)
+                if is_q:
+                    qx, qy = x_t.qparams, g.tensor(op.outputs[0]).qparams
+                    y = qf(x, s_x=qx.scale, z_x=qx.zero_point,
+                           s_y=qy.scale, z_y=qy.zero_point, **kw)
+                else:
+                    y = ff(x, **kw)
+            elif op.op == G.ADD:
+                b2 = val(op.inputs[1])
+                if is_q:
+                    qa = x_t.qparams
+                    qb = g.tensor(op.inputs[1]).qparams
+                    qy = g.tensor(op.outputs[0]).qparams
+                    y = K.add_q(x, b2, s_a=qa.scale, z_a=qa.zero_point,
+                                s_b=qb.scale, z_b=qb.zero_point,
+                                s_y=qy.scale, z_y=qy.zero_point, fused=fused)
+                else:
+                    y = K.add_f(x, b2, fused)
+            elif op.op == G.PAD:
+                if is_q:
+                    y = K.pad_q(x, pads=op.attrs["pads"],
+                                z_x=x_t.qparams.zero_point)
+                else:
+                    y = K.pad_f(x, pads=op.attrs["pads"])
+            elif op.op == G.RESHAPE:
+                y = jnp.reshape(x, op.attrs["new_shape"])
+            elif op.op in (G.RELU, G.RELU6, G.SOFTMAX):
+                if is_q:
+                    qx, qy = x_t.qparams, g.tensor(op.outputs[0]).qparams
+                    kw = dict(s_x=qx.scale, z_x=qx.zero_point,
+                              s_y=qy.scale, z_y=qy.zero_point)
+                    if op.op == G.RELU:
+                        y = K.relu_q(x, **kw)
+                    elif op.op == G.RELU6:
+                        y = K.relu6_q(x, **kw)
+                    else:
+                        y = K.softmax_q(x, axis=op.attrs.get("axis", -1), **kw)
+                else:
+                    if op.op == G.RELU:
+                        y = K.relu_f(x)
+                    elif op.op == G.RELU6:
+                        y = K.relu6_f(x)
+                    else:
+                        y = K.softmax_f(x, axis=op.attrs.get("axis", -1))
+            else:
+                raise NotImplementedError(op.op)
+            env[op.outputs[0]] = y
+
+        return tuple(env[t] for t in g.outputs)
+
+    return fn
+
+
+class CompiledModel:
+    """The user-facing ``predict()`` the paper's ``model`` macro generates."""
+
+    def __init__(self, g: G.Graph, use_pallas: bool = False,
+                 paged: Optional[dict] = None):
+        g.validate()
+        self.graph = g
+        self.folded = preprocess_graph(g)  # compile-time parser phase
+        self._fn = jax.jit(build_graph_fn(g, self.folded, use_pallas, paged))
+        self._aot = None
+
+    # -- AOT compilation (Fig. 2's "Target Binary") -----------------------
+    def compile(self):
+        specs = [jax.ShapeDtypeStruct(self.graph.tensor(t).shape,
+                                      np.dtype(self.graph.tensor(t).dtype))
+                 for t in self.graph.inputs]
+        lowered = self._fn.lower(*specs)
+        self._aot = lowered.compile()
+        return self._aot
+
+    @property
+    def executable(self):
+        if self._aot is None:
+            self.compile()
+        return self._aot
+
+    def memory_analysis(self):
+        return self.executable.memory_analysis()
+
+    def cost_analysis(self):
+        return self.executable.cost_analysis()
+
+    def memory_report(self):
+        return memory_report(self.graph)
+
+    # -- inference ---------------------------------------------------------
+    def predict_q(self, *inputs):
+        """Graph-dtype in / graph-dtype out."""
+        args = []
+        for tid, arr in zip(self.graph.inputs, inputs):
+            t = self.graph.tensor(tid)
+            args.append(jnp.asarray(np.asarray(arr, t.dtype).reshape(t.shape)))
+        outs = self.executable(*args) if self._aot is not None else self._fn(*args)
+        return outs if len(outs) > 1 else outs[0]
+
+    def predict(self, *inputs):
+        """Float in / float out (TFLite-style interface)."""
+        qin = []
+        for tid, arr in zip(self.graph.inputs, inputs):
+            t = self.graph.tensor(tid)
+            arr = np.asarray(arr, np.float32).reshape(t.shape)
+            qin.append(t.qparams.quantize(arr) if t.dtype == "int8" else arr)
+        outs = self.predict_q(*qin)
+        if not isinstance(outs, tuple):
+            outs = (outs,)
+        res = []
+        for tid, o in zip(self.graph.outputs, outs):
+            t = self.graph.tensor(tid)
+            o = np.asarray(o)
+            res.append(t.qparams.dequantize(o) if t.dtype == "int8"
+                       else o.astype(np.float32))
+        return tuple(res) if len(res) > 1 else res[0]

@@ -1,0 +1,267 @@
+"""Neural-network graph IR for the MicroFlow-JAX engine.
+
+This is the internal representation the paper's compiler builds after parsing
+(Sec. 3.3.2): a lossless, reversible description of the quantized model —
+tensors (with quantization parameters, Eq. 1) and a sequential list of
+operators. The paper parses TFLite FlatBuffers; we ship an equivalent
+lightweight format (msgpack) with the same information content. The parser is
+format-agnostic, exactly as the paper notes for ONNX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+# Operator vocabulary (paper Table 2) + the extensions the paper's Sec. 7
+# plans (residual ADD, MaxPool2D, Pad — enough for MobileNetV2/ResNet-class
+# models).
+FULLY_CONNECTED = "FULLY_CONNECTED"
+CONV_2D = "CONV_2D"
+DEPTHWISE_CONV_2D = "DEPTHWISE_CONV_2D"
+AVERAGE_POOL_2D = "AVERAGE_POOL_2D"
+MAX_POOL_2D = "MAX_POOL_2D"
+ADD = "ADD"
+PAD = "PAD"
+RESHAPE = "RESHAPE"
+RELU = "RELU"
+RELU6 = "RELU6"
+SOFTMAX = "SOFTMAX"
+
+ALL_OPS = (
+    FULLY_CONNECTED,
+    CONV_2D,
+    DEPTHWISE_CONV_2D,
+    AVERAGE_POOL_2D,
+    MAX_POOL_2D,
+    ADD,
+    PAD,
+    RESHAPE,
+    RELU,
+    RELU6,
+    SOFTMAX,
+)
+
+# Fused activations supported by the weighted ops (paper Sec. 5.5).
+FUSED_NONE = "NONE"
+FUSED_RELU = "RELU"
+FUSED_RELU6 = "RELU6"
+
+_DTYPES = {"int8", "int32", "float32"}
+
+
+@dataclass
+class QParams:
+    """Quantization parameters of Eq. (1): r = S (q - Z).
+
+    ``scale``/``zero_point`` are scalars for per-tensor quantization or
+    1-D arrays (length = size of ``axis``) for per-channel quantization.
+    """
+
+    scale: np.ndarray
+    zero_point: np.ndarray
+    axis: Optional[int] = None  # channel axis for per-channel quantization
+
+    def __post_init__(self):
+        self.scale = np.asarray(self.scale, dtype=np.float32)
+        self.zero_point = np.asarray(self.zero_point, dtype=np.int32)
+
+    @property
+    def per_channel(self) -> bool:
+        return self.axis is not None
+
+    def quantize(self, r: np.ndarray, dtype=np.int8) -> np.ndarray:
+        info = np.iinfo(dtype)
+        s, z = self.scale, self.zero_point
+        if self.per_channel:
+            shape = [1] * r.ndim
+            shape[self.axis] = -1
+            s = s.reshape(shape)
+            z = z.reshape(shape)
+        q = np.round(r / s) + z
+        return np.clip(q, info.min, info.max).astype(dtype)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        s, z = self.scale, self.zero_point
+        if self.per_channel:
+            shape = [1] * q.ndim
+            shape[self.axis] = -1
+            s = s.reshape(shape)
+            z = z.reshape(shape)
+        return (q.astype(np.float32) - z) * s
+
+
+@dataclass
+class TensorSpec:
+    """A tensor in the graph: activation (data=None) or constant (weights)."""
+
+    name: str
+    shape: tuple
+    dtype: str
+    qparams: Optional[QParams] = None
+    data: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        assert self.dtype in _DTYPES, self.dtype
+        self.shape = tuple(int(d) for d in self.shape)
+        if self.data is not None:
+            self.data = np.asarray(self.data)
+            assert tuple(self.data.shape) == self.shape, (
+                self.name, self.data.shape, self.shape)
+
+    @property
+    def is_const(self) -> bool:
+        return self.data is not None
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) * np.dtype(self.dtype).itemsize
+
+
+@dataclass
+class OpNode:
+    """One operator: named op, tensor ids for inputs/outputs, attributes.
+
+    attrs (by op):
+      FULLY_CONNECTED:   fused (NONE/RELU/RELU6)
+      CONV_2D:           stride (sh, sw), padding (SAME/VALID), fused
+      DEPTHWISE_CONV_2D: stride, padding, fused
+      AVERAGE_POOL_2D:   window (wh, ww), stride, padding, fused
+      RESHAPE:           new_shape
+      RELU / RELU6 / SOFTMAX: (none); SOFTMAX: axis
+    """
+
+    op: str
+    inputs: list
+    outputs: list
+    attrs: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        assert self.op in ALL_OPS, self.op
+
+
+@dataclass
+class Graph:
+    """Sequential NN graph. ``tensors`` indexed by integer id."""
+
+    tensors: list  # list[TensorSpec]
+    ops: list  # list[OpNode]
+    inputs: list  # tensor ids
+    outputs: list  # tensor ids
+    name: str = "model"
+
+    def tensor(self, tid: int) -> TensorSpec:
+        return self.tensors[tid]
+
+    def add_tensor(self, t: TensorSpec) -> int:
+        self.tensors.append(t)
+        return len(self.tensors) - 1
+
+    @property
+    def weight_bytes(self) -> int:
+        return sum(t.nbytes for t in self.tensors if t.is_const)
+
+    @property
+    def activation_ids(self) -> list:
+        return [i for i, t in enumerate(self.tensors) if not t.is_const]
+
+    def validate(self) -> None:
+        n = len(self.tensors)
+        produced = set(self.inputs)
+        for t in self.inputs + self.outputs:
+            assert 0 <= t < n
+        for op in self.ops:
+            for t in op.inputs:
+                assert 0 <= t < n, (op.op, t)
+                if not self.tensors[t].is_const:
+                    assert t in produced, f"{op.op} reads unproduced tensor {t}"
+            for t in op.outputs:
+                assert 0 <= t < n
+                assert not self.tensors[t].is_const
+                produced.add(t)
+        for t in self.outputs:
+            assert t in produced, f"graph output {t} never produced"
+
+
+# ---------------------------------------------------------------------------
+# Serialization — our FlatBuffers-equivalent on-disk format (msgpack).
+# ---------------------------------------------------------------------------
+
+def _qp_to_dict(qp: Optional[QParams]):
+    if qp is None:
+        return None
+    return {
+        "scale": qp.scale.tolist(),
+        "zero_point": qp.zero_point.tolist(),
+        "axis": qp.axis,
+    }
+
+
+def _qp_from_dict(d) -> Optional[QParams]:
+    if d is None:
+        return None
+    return QParams(np.asarray(d["scale"], np.float32),
+                   np.asarray(d["zero_point"], np.int32), d["axis"])
+
+
+def save(graph: Graph, path: str) -> None:
+    import msgpack
+
+    doc = {
+        "name": graph.name,
+        "inputs": list(graph.inputs),
+        "outputs": list(graph.outputs),
+        "tensors": [
+            {
+                "name": t.name,
+                "shape": list(t.shape),
+                "dtype": t.dtype,
+                "qparams": _qp_to_dict(t.qparams),
+                "data": None if t.data is None else t.data.tobytes(),
+            }
+            for t in graph.tensors
+        ],
+        "ops": [dataclasses.asdict(op) for op in graph.ops],
+    }
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(doc, use_bin_type=True))
+
+
+def load(path: str) -> Graph:
+    import msgpack
+
+    with open(path, "rb") as f:
+        doc = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    tensors = []
+    for td in doc["tensors"]:
+        data = td["data"]
+        if data is not None:
+            data = np.frombuffer(data, dtype=td["dtype"]).reshape(td["shape"]).copy()
+        tensors.append(
+            TensorSpec(td["name"], tuple(td["shape"]), td["dtype"],
+                       _qp_from_dict(td["qparams"]), data))
+    def _fix_attrs(attrs):
+        return {k: tuple(v) if isinstance(v, list) else v
+                for k, v in attrs.items()}
+
+    ops = [OpNode(o["op"], list(o["inputs"]), list(o["outputs"]),
+                  _fix_attrs(o["attrs"]))
+           for o in doc["ops"]]
+    g = Graph(tensors, ops, list(doc["inputs"]), list(doc["outputs"]), doc["name"])
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Shape inference helpers shared by builder / planner / engines.
+# ---------------------------------------------------------------------------
+
+def conv_out_hw(h, w, kh, kw, stride, padding):
+    sh, sw = stride
+    if padding == "SAME":
+        return -(-h // sh), -(-w // sw)
+    if padding == "VALID":
+        return (h - kh) // sh + 1, (w - kw) // sw + 1
+    raise ValueError(padding)

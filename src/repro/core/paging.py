@@ -1,0 +1,59 @@
+"""Paging (Sec. 4.3): split a layer into pages — all connections into one
+slice of output units (Fig. 6) — and process them one at a time.
+
+On the MCU this bounds RAM: only one page of weights is resident. On TPU the
+identical structure maps to HBM→VMEM streaming: the compute iterates a grid
+over output-unit pages, and only the current page's weight tile occupies VMEM
+(`repro.kernels.paged_matmul` implements exactly this with a BlockSpec whose
+index_map walks the output dimension). This module provides the math-level
+paged execution (lax.scan over pages) used by the compiled engine, plus the
+byte accounting lives in repro.core.memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ops_ref import FoldedConsts, _saturate_i8, _fused_bounds
+
+
+def paged_fc_folded(x_q, w_q, fc: FoldedConsts, n_pages: int,
+                    fused: str = "NONE"):
+    """Folded Eq. (3) computed page-by-page over the output dimension.
+
+    Bit-identical to ``fully_connected_folded``; the scan carries nothing —
+    each page is independent, exactly the paper's ownership claim that a page
+    'leaves no memory trace after its execution'.
+    """
+    n, p = w_q.shape
+    assert p % n_pages == 0, (p, n_pages)
+    page = p // n_pages
+
+    x32 = x_q.astype(jnp.int32)
+    sum_x = jnp.sum(x32, axis=-1, keepdims=True)
+
+    def per_channel(arr):
+        arr = jnp.asarray(arr)
+        if arr.ndim == 0:
+            return jnp.broadcast_to(arr, (p,))
+        return arr
+
+    bias_term = per_channel(fc.bias_term).reshape(n_pages, page)
+    rescale = per_channel(fc.rescale).reshape(n_pages, page)
+    w_sum_zx = per_channel(fc.w_sum_zx).reshape(n_pages, page)
+    const_off = per_channel(fc.const_off).reshape(n_pages, page)
+    z_w = per_channel(fc.z_w).reshape(n_pages, page)
+    w_pages = w_q.T.reshape(n_pages, page, n)  # (pages, page, n)
+
+    def body(_, inputs):
+        w_pg, bias_pg, resc_pg, wsum_pg, coff_pg, zw_pg = inputs
+        acc = x32 @ w_pg.astype(jnp.int32).T          # (m, page)
+        inner = acc - zw_pg * sum_x - wsum_pg + coff_pg
+        y = bias_pg + resc_pg * inner.astype(jnp.float32)
+        lo, hi = _fused_bounds(fused, fc.z_y, fc.s_y)
+        return None, _saturate_i8(jnp.clip(y, lo, hi))
+
+    _, pages_out = jax.lax.scan(
+        body, None, (w_pages, bias_term, rescale, w_sum_zx, const_off, z_w))
+    # (pages, m, page) -> (m, p)
+    return jnp.moveaxis(pages_out, 0, 1).reshape(x_q.shape[0], p)

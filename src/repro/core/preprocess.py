@@ -1,0 +1,85 @@
+"""Compile-time pre-processing — the *parser* half of each operator (Sec. 3.3.3).
+
+For every weighted operator, the four constant terms of Eqs. (4), (7), (10)
+are computed here, once, on the host, and baked into the compiled executable.
+The runtime kernel (ops_ref / kernels) then only computes the input-dependent
+terms. This is the paper's central compiler-based optimization.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import graph as G
+from .ops_ref import FoldedConsts
+
+
+def _scalar_or_channel(qp: G.QParams):
+    return qp.scale, qp.zero_point
+
+
+def fold_weighted_op(g: G.Graph, op: G.OpNode) -> FoldedConsts:
+    """Compute the constant terms for FC / Conv2D / DepthwiseConv2D."""
+    x_t = g.tensor(op.inputs[0])
+    w_t = g.tensor(op.inputs[1])
+    b_t = g.tensor(op.inputs[2]) if len(op.inputs) > 2 and op.inputs[2] >= 0 else None
+    y_t = g.tensor(op.outputs[0])
+
+    s_x, z_x = _scalar_or_channel(x_t.qparams)
+    s_w, z_w = _scalar_or_channel(w_t.qparams)
+    s_y, z_y = _scalar_or_channel(y_t.qparams)
+
+    w = w_t.data.astype(np.int64)
+    if op.op == G.FULLY_CONNECTED:
+        # w: (n, p) — sum over the contraction dim k (Eq. 4, third term)
+        sum_w = w.sum(axis=0)
+        count = w.shape[0]
+    elif op.op == G.CONV_2D:
+        # w: (kh, kw, cin, cout) — Eq. (7), third term
+        sum_w = w.sum(axis=(0, 1, 2))
+        count = int(np.prod(w.shape[:3]))
+    elif op.op == G.DEPTHWISE_CONV_2D:
+        # w: (kh, kw, c, 1) — Eq. (10), third term
+        sum_w = w.sum(axis=(0, 1, 3))
+        count = int(np.prod(w.shape[:2]))
+    else:
+        raise ValueError(op.op)
+
+    if b_t is not None:
+        s_b, z_b = _scalar_or_channel(b_t.qparams)
+        bias_term = z_y + (s_b / s_y) * (b_t.data.astype(np.float64) - z_b)
+    else:
+        bias_term = np.asarray(z_y, np.float64)
+
+    rescale = (np.asarray(s_x, np.float64) * s_w) / s_y
+    w_sum_zx = (np.asarray(z_x, np.int64) * sum_w).astype(np.int32)
+    const_off = (count * np.asarray(z_x, np.int64) * z_w).astype(np.int32)
+
+    return FoldedConsts(
+        bias_term=np.asarray(bias_term, np.float32),
+        rescale=np.asarray(rescale, np.float32),
+        w_sum_zx=w_sum_zx,
+        const_off=const_off,
+        z_w=np.asarray(z_w, np.int32),
+        z_y=np.asarray(z_y, np.int32),
+        s_y=np.asarray(s_y, np.float32),
+        z_x=np.asarray(z_x, np.int32),
+    )
+
+
+def preprocess_graph(g: G.Graph) -> dict:
+    """op index -> FoldedConsts, for every quantized weighted op."""
+    folded = {}
+    for i, op in enumerate(g.ops):
+        if op.op in (G.FULLY_CONNECTED, G.CONV_2D, G.DEPTHWISE_CONV_2D):
+            if g.tensor(op.inputs[0]).dtype == "int8":
+                folded[i] = fold_weighted_op(g, op)
+    return folded
+
+
+def folded_const_bytes(folded: dict) -> int:
+    """Bytes of compile-time constants baked into the executable."""
+    total = 0
+    for fc in folded.values():
+        for arr in (fc.bias_term, fc.rescale, fc.w_sum_zx, fc.const_off):
+            total += np.asarray(arr).nbytes
+    return total

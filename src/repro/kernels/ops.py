@@ -1,0 +1,119 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handle the engine-facing plumbing: fused-activation bounds from FoldedConsts,
+padding to MXU-aligned tiles (lanes 128), SAME→VALID border pre-padding with
+the input zero point, and interpret-mode selection (interpret=True on CPU —
+the kernel body then executes in Python for validation; on TPU it compiles
+to Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ops_ref import FoldedConsts, pad_input_q, same_pads
+from . import qmatmul as _qm
+from . import paged_matmul as _pm
+from . import qdwconv as _dw
+
+LANE = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _bounds(fc: FoldedConsts, fused: str):
+    z_y = float(np.asarray(fc.z_y))
+    s_y = float(np.asarray(fc.s_y))
+    if fused == "RELU":
+        return z_y, float("inf")
+    if fused == "RELU6":
+        return z_y, z_y + 6.0 / s_y
+    if fused == "NONE":
+        return float("-inf"), float("inf")
+    raise ValueError(fused)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad2(a, m0, m1, value=0):
+    p0 = _round_up(a.shape[0], m0) - a.shape[0]
+    p1 = _round_up(a.shape[1], m1) - a.shape[1]
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)), constant_values=value)
+    return a
+
+
+def _pad_channel_consts(fc: FoldedConsts, n: int, n_pad: int):
+    def grow(v, dtype):
+        v = jnp.broadcast_to(jnp.asarray(v, dtype).reshape(-1), (n,))
+        return jnp.pad(v, (0, n_pad - n))
+    return (grow(fc.bias_term, jnp.float32), grow(fc.rescale, jnp.float32),
+            grow(fc.w_sum_zx, jnp.int32), grow(fc.const_off, jnp.int32),
+            grow(fc.z_w, jnp.int32))
+
+
+def qmatmul_folded(x_q, w_q, fc: FoldedConsts, fused: str = "NONE",
+                   *, paged: bool = False, page: int = LANE):
+    """Engine entry point: folded Eq. (3) on the MXU-tiled Pallas kernel.
+    Pads (M, K, N) to 128 multiples with zeros — zero K-padding contributes
+    nothing to either Σ X W or Σ X, so the result is exact after slicing."""
+    m, k = x_q.shape
+    _, n = w_q.shape
+    lo, hi = _bounds(fc, fused)
+    xp = _pad2(x_q, LANE, LANE)
+    wp = _pad2(w_q, LANE, LANE)
+    consts = _pad_channel_consts(fc, n, wp.shape[1])
+    if paged:
+        out = _pm.paged_qmatmul(xp, wp, *consts, page=page, lo=lo, hi=hi,
+                                interpret=_interpret())
+    else:
+        out = _qm.qmatmul(xp, wp, *consts, lo=lo, hi=hi,
+                          interpret=_interpret())
+    return out[:m, :n]
+
+
+def fmatmul(x, w):
+    """Float matmul on the Pallas kernel (dtype sweeps / float FC path)."""
+    m, k = x.shape
+    _, n = w.shape
+    out = _qm.fmatmul(_pad2(x, LANE, LANE), _pad2(w, LANE, LANE),
+                      interpret=_interpret())
+    return out[:m, :n]
+
+
+def qdwconv_folded(x_q, w_q, fc: FoldedConsts, *, stride, padding,
+                   fused: str = "NONE", bc: int = LANE):
+    """Engine entry point: folded Eq. (9) on the channel-blocked Pallas
+    kernel. SAME borders are pre-padded with z_X (see ops_ref.pad_input_q);
+    channels are padded to the lane width."""
+    stride = tuple(stride)
+    kh, kw, c, mult = w_q.shape
+    assert mult == 1
+    lo, hi = _bounds(fc, fused)
+    x_q = pad_input_q(x_q, kh, kw, stride, padding, fc.z_x)
+    b, H, W, _ = x_q.shape
+    sh, sw = stride
+    oh = (H - kh) // sh + 1
+    ow = (W - kw) // sw + 1
+
+    bc = min(bc, _round_up(c, 8))
+    c_pad = _round_up(c, bc)
+    if c_pad != c:
+        x_q = jnp.pad(x_q, ((0, 0), (0, 0), (0, 0), (0, c_pad - c)))
+    w3 = jnp.pad(w_q[..., 0], ((0, 0), (0, 0), (0, c_pad - c)))
+
+    def grow(v, dtype):
+        v = jnp.broadcast_to(jnp.asarray(v, dtype).reshape(-1), (c,))
+        return jnp.pad(v, (0, c_pad - c))
+
+    consts = (grow(fc.bias_term, jnp.float32), grow(fc.rescale, jnp.float32),
+              grow(fc.w_sum_zx, jnp.int32), grow(fc.const_off, jnp.int32),
+              grow(fc.z_w, jnp.int32))
+    out = _dw.qdwconv(x_q, w3, *consts, stride=stride, out_hw=(oh, ow),
+                      bc=bc, lo=lo, hi=hi, interpret=_interpret())
+    return out[..., :c]

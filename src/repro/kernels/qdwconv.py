@@ -1,0 +1,82 @@
+"""Quantized DepthwiseConv2D Pallas kernel — Eq. (9), TPU-native.
+
+MobileNet-style depthwise convolutions dominate the paper's person-detector
+model. TPU adaptation: channels are the fast (lane) dimension, so the kernel
+blocks over channels (bc lanes per grid step) and keeps the whole spatial
+extent in VMEM (TinyML feature maps are tiny: 96×96×8 int8 = 72 KiB). The
+kh×kw taps are a static unrolled loop of strided VMEM slices — the MCU's
+sliding-window "view extraction" (Algorithm 1) becomes vectorized lane math.
+
+Input must be pre-padded (ops.qdwconv_folded handles SAME), kernel is VALID.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I8_MIN, I8_MAX = -128, 127
+
+
+def _qdwconv_kernel(x_ref, w_ref, bias_ref, resc_ref, wsum_ref, coff_ref,
+                    zw_ref, out_ref, *, kh, kw, stride, lo, hi):
+    sh, sw = stride
+    _, H, W, bc = x_ref.shape
+    _, oh, ow, _ = out_ref.shape
+    x = x_ref[...].astype(jnp.int32)          # (1, H, W, bc)
+    w = w_ref[...].astype(jnp.int32)          # (kh, kw, bc)
+
+    acc = jnp.zeros((1, oh, ow, bc), jnp.int32)
+    sum_x = jnp.zeros((1, oh, ow, bc), jnp.int32)
+    for i in range(kh):                       # static tap loop (Algorithm 1)
+        for j in range(kw):
+            sl = jax.lax.slice(
+                x, (0, i, j, 0),
+                (1, i + (oh - 1) * sh + 1, j + (ow - 1) * sw + 1, bc),
+                (1, sh, sw, 1))               # (1, oh, ow, bc)
+            acc = acc + sl * w[i, j]          # ΣΣ X W   per channel
+            sum_x = sum_x + sl                # ΣΣ X     per channel
+
+    inner = acc - zw_ref[...] * sum_x - wsum_ref[...] + coff_ref[...]
+    y = bias_ref[...] + resc_ref[...] * inner.astype(jnp.float32)
+    y = jnp.clip(y, lo, hi)
+    out_ref[...] = jnp.clip(jnp.round(y), I8_MIN, I8_MAX).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "out_hw", "bc", "lo", "hi",
+                              "interpret"))
+def qdwconv(x_q, w_q, bias_term, rescale, w_sum_zx, const_off, z_w,
+            *, stride, out_hw, bc=128, lo=-jnp.inf, hi=jnp.inf,
+            interpret=False):
+    """x_q (B, H, W, C) int8 pre-padded, w_q (kh, kw, C) int8, consts (C,).
+    C % bc == 0 (ops wrapper pads channels)."""
+    b, H, W, c = x_q.shape
+    kh, kw, _ = w_q.shape
+    oh, ow = out_hw
+    assert c % bc == 0, (c, bc)
+
+    def row(v, dtype):
+        return jnp.broadcast_to(jnp.asarray(v, dtype).reshape(-1), (c,)) \
+                  .reshape(1, 1, 1, c)
+
+    consts = (row(bias_term, jnp.float32), row(rescale, jnp.float32),
+              row(w_sum_zx, jnp.int32), row(const_off, jnp.int32),
+              row(z_w, jnp.int32))
+    const_spec = pl.BlockSpec((1, 1, 1, bc), lambda n, cc: (0, 0, 0, cc))
+
+    return pl.pallas_call(
+        functools.partial(_qdwconv_kernel, kh=kh, kw=kw, stride=stride,
+                          lo=lo, hi=hi),
+        grid=(b, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, H, W, bc), lambda n, cc: (n, 0, 0, cc)),
+            pl.BlockSpec((kh, kw, bc), lambda n, cc: (0, 0, cc)),
+            const_spec, const_spec, const_spec, const_spec, const_spec,
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, bc), lambda n, cc: (n, 0, 0, cc)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, c), jnp.int8),
+        interpret=interpret,
+    )(x_q, w_q, *consts)

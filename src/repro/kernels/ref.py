@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (no pallas imports here).
+
+These mirror the kernels' contracts exactly: folded-constant int8 math with
+explicit (lo, hi) clamp bounds. The engine-level references live in
+``repro.core.ops_ref``; these oracles re-express them in the kernels'
+pre-padded / pre-broadcast argument convention so the per-kernel allclose
+tests compare like for like.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+I8_MIN, I8_MAX = -128, 127
+
+
+def _requant(acc, sum_x, bias_term, rescale, w_sum_zx, const_off, z_w, lo, hi):
+    inner = acc - z_w * sum_x - w_sum_zx + const_off
+    y = bias_term + rescale * inner.astype(jnp.float32)
+    y = jnp.clip(y, lo, hi)
+    return jnp.clip(jnp.round(y), I8_MIN, I8_MAX).astype(jnp.int8)
+
+
+def qmatmul_ref(x_q, w_q, bias_term, rescale, w_sum_zx, const_off, z_w,
+                *, lo=-jnp.inf, hi=jnp.inf):
+    """Oracle for kernels.qmatmul.qmatmul and paged_matmul.paged_qmatmul."""
+    x32 = x_q.astype(jnp.int32)
+    acc = x32 @ w_q.astype(jnp.int32)
+    sum_x = jnp.sum(x32, axis=-1, keepdims=True)
+    n = w_q.shape[1]
+
+    def row(v, dtype):
+        return jnp.broadcast_to(jnp.asarray(v, dtype).reshape(-1), (n,))
+
+    return _requant(acc, sum_x, row(bias_term, jnp.float32),
+                    row(rescale, jnp.float32), row(w_sum_zx, jnp.int32),
+                    row(const_off, jnp.int32), row(z_w, jnp.int32), lo, hi)
+
+
+def fmatmul_ref(x, w):
+    """Oracle for kernels.qmatmul.fmatmul."""
+    return jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def qdwconv_ref(x_q, w_q, bias_term, rescale, w_sum_zx, const_off, z_w,
+                *, stride, lo=-jnp.inf, hi=jnp.inf):
+    """Oracle for kernels.qdwconv.qdwconv. x_q (B,H,W,C) pre-padded,
+    w_q (kh,kw,C); VALID conv."""
+    kh, kw, c = w_q.shape
+    sh, sw = stride
+    b, H, W, _ = x_q.shape
+    oh = (H - kh) // sh + 1
+    ow = (W - kw) // sw + 1
+    x32 = x_q.astype(jnp.int32)
+    w32 = w_q.astype(jnp.int32)
+    acc = jnp.zeros((b, oh, ow, c), jnp.int32)
+    sum_x = jnp.zeros((b, oh, ow, c), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            sl = jax.lax.slice(
+                x32, (0, i, j, 0),
+                (b, i + (oh - 1) * sh + 1, j + (ow - 1) * sw + 1, c),
+                (1, sh, sw, 1))
+            acc = acc + sl * w32[i, j]
+            sum_x = sum_x + sl
+
+    def row(v, dtype):
+        return jnp.broadcast_to(jnp.asarray(v, dtype).reshape(-1), (c,))
+
+    return _requant(acc, sum_x, row(bias_term, jnp.float32),
+                    row(rescale, jnp.float32), row(w_sum_zx, jnp.int32),
+                    row(const_off, jnp.int32), row(z_w, jnp.int32), lo, hi)

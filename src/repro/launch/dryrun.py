@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (architecture × input shape)
+on the production meshes, and record roofline inputs.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single multi --out results/dryrun
+
+For each combination this lowers the real step function (train / prefill /
+decode) against ShapeDtypeStruct inputs, compiles it for the 16×16 (and
+2×16×16) mesh of placeholder host devices, prints memory_analysis() (proves
+the buffer assignment fits / reports per-device bytes) and cost_analysis()
+(per-device HLO FLOPs/bytes), parses the collective ops out of the compiled
+HLO, and writes one JSON per combination (resumable).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config, list_configs
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind, from result shapes."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    pat = re.compile(
+        r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for m in pat.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        if kind.endswith("-done") or "-done(" in m.group(0):
+            continue
+        total = 0
+        for dt, dims in shape_pat.findall(shapes):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += total
+    return out
+
+
+def build_step(cfg, shape, quantized: bool = False,
+               chunked_ce: int = 0):
+    """Returns (fn, arg_specs(dict), donate_argnums).
+
+    quantized=True (inference kinds only): parameters are int8 weight-only
+    QuantizedTensors (the paper's Eq. 1 at LLM scale), dequantized inside
+    the step so XLA fuses the rescale into the consuming matmul."""
+    specs = SP.input_specs(cfg, shape)
+    ecfg = SP.effective_config(cfg, shape)
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        step = make_train_step(ecfg, opt_cfg, remat=True,
+                               chunked_ce=chunked_ce)
+        return step, (specs["params"], specs["opt_state"], specs["batch"]), \
+            (0, 1)
+
+    p_specs = specs["params"]
+    if quantized:
+        from repro.serve.quantized import quantize_params, dequantize_params
+        p_specs = jax.eval_shape(quantize_params, p_specs)
+
+    if shape.kind == "prefill":
+        def step(params, batch, cache):
+            if quantized:
+                params = dequantize_params(params)
+            return M.prefill(ecfg, params, batch, cache)
+        return step, (p_specs, specs["batch"], specs["cache"]), (2,)
+
+    def step(params, tokens, cache, pos):
+        if quantized:
+            params = dequantize_params(params)
+        return M.decode_step(ecfg, params, tokens, cache, pos)
+    return step, (p_specs, specs["tokens"], specs["cache"],
+                  specs["pos"]), (2,)
+
+
+def arg_shardings(cfg, shape, args, mesh, fsdp, expert_parallel=False,
+                  cache_model_shard=True):
+    """PartitionSpec tree parallel to the abstract args."""
+    p_specs = SH.param_specs(args[0], mesh, fsdp=fsdp,
+                             expert_parallel=expert_parallel)
+    from jax.sharding import PartitionSpec as P
+    if shape.kind == "train":
+        o_specs = {"mu": jax.tree.map(lambda s: s, p_specs),
+                   "nu": jax.tree.map(lambda s: s, p_specs),
+                   "step": P()}
+        b_specs = SH.batch_specs(args[2], mesh)
+        return (p_specs, o_specs, b_specs)
+    if shape.kind == "prefill":
+        b_specs = SH.batch_specs(args[1], mesh)
+        c_specs = SH.cache_specs(args[2], mesh, cache_model_shard)
+        return (p_specs, b_specs, c_specs)
+    t_spec = SH.batch_specs(args[1], mesh)
+    c_specs = SH.cache_specs(args[2], mesh, cache_model_shard)
+    return (p_specs, t_spec, c_specs, P())
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: str = "auto",
+            out_dir: str = "results/dryrun", step_override=None,
+            tag: str = "", cfg=None, quantized: bool = False,
+            expert_parallel: bool = False,
+            cache_model_shard: bool = True,
+            chunked_ce: int = 0) -> dict:
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+           "kind": shape.kind, "quantized": quantized,
+           "expert_parallel": expert_parallel}
+
+    reason = SP.skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fname = f"{arch}__{shape_name}__{mesh_name}"
+            if tag:
+                fname += f"__{tag}"
+            with open(os.path.join(out_dir, fname + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+
+    use_fsdp = (cfg.param_count() * 2 > 64e9) if fsdp == "auto" \
+        else (fsdp == "on")
+    rec["fsdp"] = use_fsdp
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        if step_override is not None:
+            step, args, donate = step_override(cfg, shape)
+        else:
+            step, args, donate = build_step(cfg, shape, quantized=quantized,
+                                            chunked_ce=chunked_ce)
+        in_specs = arg_shardings(cfg, shape, args, mesh, use_fsdp,
+                                 expert_parallel=expert_parallel,
+                                 cache_model_shard=cache_model_shard)
+        in_sh = SH.to_shardings(in_specs, mesh)
+
+        t0 = time.time()
+        with mesh:
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        colls = collective_bytes(hlo)
+
+        rec.update(
+            status="ok",
+            n_devices=mesh.devices.size,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=mem.argument_size_in_bytes,
+                output_bytes=mem.output_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+            ),
+            flops_per_device=cost.get("flops", 0.0),
+            bytes_per_device=cost.get("bytes accessed", 0.0),
+            collectives=colls,
+            collective_bytes_total=sum(v["bytes"] for v in colls.values()),
+        )
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}"
+              f"{' ×' + tag if tag else ''}: OK "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s, "
+              f"{cost.get('flops', 0):.3g} flops/dev, "
+              f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB/dev)")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+              f"FAILED — {type(e).__name__}: {str(e)[:200]}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}"
+        if tag:
+            fname += f"__{tag}"
+        with open(os.path.join(out_dir, fname + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="+", default=["all"])
+    ap.add_argument("--shape", nargs="+", default=["all"])
+    ap.add_argument("--mesh", nargs="+", default=["single"],
+                    choices=["single", "multi"])
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_configs() if args.arch == ["all"] else args.arch
+    shapes = list(INPUT_SHAPES) if args.shape == ["all"] else args.shape
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh in args.mesh:
+                fname = os.path.join(args.out,
+                                     f"{arch}__{shape}__{mesh}.json")
+                if args.skip_done and os.path.exists(fname):
+                    with open(fname) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[dryrun] skip (done): {arch} × {shape} × {mesh}")
+                        results.append(prev)
+                        continue
+                results.append(run_one(arch, shape, mesh == "multi",
+                                       args.fsdp, args.out))
+
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\n[dryrun] total={len(results)} ok={ok} skipped={sk} error={err}")
+    if err:
+        for r in results:
+            if r["status"] == "error":
+                print("  FAIL:", r["arch"], r["shape"], r["mesh"], "--",
+                      r["error"][:160])
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

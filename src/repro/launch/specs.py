@@ -1,0 +1,90 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch × input-shape):
+weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model as M
+from repro.optim import adamw
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+SLIDING_WINDOW_500K = 8192
+
+
+def effective_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Apply per-shape architecture policy (DESIGN.md §Input-shape policy):
+    long_500k requires sub-quadratic attention — full-attention archs get the
+    sliding-window decode variant."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic \
+            and not cfg.attention_free and cfg.family != "audio":
+        cfg = dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_500K)
+    return cfg
+
+
+def skip_reason(cfg: ArchConfig, shape: InputShape):
+    if shape.name == "long_500k" and cfg.family == "audio":
+        return ("enc-dec decoder context is architecturally bounded by the "
+                "encoder (1500 frames); a 524k decoder cache contradicts the "
+                "architecture (DESIGN.md)")
+    return None
+
+
+def local_batch(shape: InputShape, n_data_shards: int = 1) -> int:
+    return max(shape.global_batch, 1)
+
+
+def token_specs(cfg: ArchConfig, B: int, T: int) -> dict:
+    s = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+    if cfg.modality == "vision":
+        s["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.frontend_dim), PARAM_DTYPE)
+    if cfg.encoder_layers:
+        s["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frames, cfg.d_model), PARAM_DTYPE)
+    return s
+
+
+def param_shapes(cfg: ArchConfig, max_seq: int):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0), PARAM_DTYPE,
+                              max_seq=max_seq))
+
+
+def opt_shapes(params_shapes):
+    return jax.eval_shape(adamw.init, params_shapes)
+
+
+def cache_shapes(cfg: ArchConfig, B: int, S: int):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, B, S, CACHE_DTYPE))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Everything the step function for this (arch, shape) consumes."""
+    cfg = effective_config(cfg, shape)
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = token_specs(cfg, B, T)
+        batch["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+        params = param_shapes(cfg, max_seq=T)
+        return {"params": params, "opt_state": opt_shapes(params),
+                "batch": batch}
+    if shape.kind == "prefill":
+        batch = token_specs(cfg, B, T)
+        params = param_shapes(cfg, max_seq=T)
+        return {"params": params, "batch": batch,
+                "cache": cache_shapes(cfg, B, T)}
+    # decode: ONE new token against a cache of capacity seq_len
+    params = param_shapes(cfg, max_seq=T + 1)
+    return {"params": params,
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": cache_shapes(cfg, B, T),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

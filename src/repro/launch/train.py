@@ -1,0 +1,100 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b-smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+Runs real training on the local device(s); any registered arch id works,
+``<id>-smoke`` selects the reduced variant. On a real TPU slice the same
+entry point runs under the production mesh (--mesh single|multi).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM, frontend_stub
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import checkpoint as CKPT
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="local",
+                    choices=["local", "single", "multi"])
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    dtype = jnp.dtype(args.dtype)
+    mesh = (make_local_mesh() if args.mesh == "local"
+            else make_production_mesh(multi_pod=args.mesh == "multi"))
+
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed), dtype,
+                           max_seq=args.seq)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10,
+                                                             1),
+                                total_steps=args.steps)
+    opt_state = adamw.init(params)
+
+    start = 0
+    if args.ckpt_dir:
+        last = CKPT.latest_step(args.ckpt_dir)
+        if last is not None:
+            state = CKPT.restore({"params": params, "opt": opt_state},
+                                 CKPT.step_path(args.ckpt_dir, last))
+            params, opt_state = state["params"], state["opt"]
+            start = last
+            print(f"[train] resumed from step {start}")
+
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch,
+                                  seed=args.seed))
+    stub_rng = np.random.default_rng(args.seed)
+
+    step_fn = make_train_step(cfg, opt_cfg, remat=args.remat)
+    p_specs = SH.param_specs(params, mesh)
+    with mesh:
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        t0 = time.time()
+        losses = []
+        for step in range(start, args.steps):
+            batch = data.batch(step)
+            batch.update(frontend_stub(cfg, args.batch, stub_rng))
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[train] step {step:5d} loss {losses[-1]:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.2f} "
+                      f"({time.time()-t0:.1f}s)")
+            if args.ckpt_dir and args.ckpt_every \
+                    and (step + 1) % args.ckpt_every == 0:
+                CKPT.save({"params": params, "opt": opt_state},
+                          CKPT.step_path(args.ckpt_dir, step + 1))
+    print(f"[train] done: first loss {losses[0]:.4f} "
+          f"last loss {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,271 @@
+"""Attention mixers: GQA (with RoPE / 2D-RoPE / sliding window) and
+MLA (DeepSeek-V2 compressed-KV latent attention), plus cross-attention for
+the encoder–decoder (Whisper) family.
+
+All mixers share the cache contract used by the serving path:
+  * ``mode="train"``  — full self-attention, no cache.
+  * ``mode="prefill"`` — full self-attention over T tokens; returns the cache
+    whose capacity is the table's seq_len (or the sliding window).
+  * ``mode="decode"`` — ONE new token; the cache is updated in place at
+    position ``pos`` (buffer-donated by the serve step — the paper's
+    ownership transfer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+NEG_INF = -1e30
+
+
+# -- RoPE --------------------------------------------------------------------
+
+def rope_angles(positions, dim, theta):
+    """positions (...,) -> cos/sin (..., dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, kind, theta):
+    """x (B, T, H, hd); positions (B, T) or (T,). kind: standard|2d|none."""
+    if kind in ("none", "learned"):
+        return x
+    hd = x.shape[-1]
+    rot = hd if kind == "standard" else hd // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    cos, sin = rope_angles(positions, rot, theta)          # (B, T, rot/2)
+    cos = cos[..., None, :].astype(x.dtype)
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return jnp.concatenate([out, xp], -1) if rot < hd else out
+
+
+# -- shared core ---------------------------------------------------------------
+
+def _sdpa(q, k, v, mask):
+    """q (B,T,H,hd), k/v (B,S,KV,hd) with H = KV * rep; mask (B,1,T,S) or
+    broadcastable boolean (True = attend)."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    q = q.reshape(B, T, KV, rep, hd)
+    scores = jnp.einsum("btkrh,bskh->bkrts", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrts,bskh->btkrh", w, v)
+    return out.reshape(B, T, H, hd)
+
+
+def causal_mask(T, positions_q, positions_k):
+    """True where query may attend key (pos_k <= pos_q)."""
+    return positions_k[:, None, :] <= positions_q[:, :, None]
+
+
+# -- GQA ----------------------------------------------------------------------
+
+def init_gqa(cfg, key, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], (d, H * hd), dtype),
+            "wk": dense_init(ks[1], (d, KV * hd), dtype),
+            "wv": dense_init(ks[2], (d, KV * hd), dtype),
+            "wo": dense_init(ks[3], (H * hd, d), dtype)}
+
+
+def init_gqa_cache(cfg, B, S, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    return {"k": jnp.zeros((B, W, KV, hd), dtype),
+            "v": jnp.zeros((B, W, KV, hd), dtype)}
+
+
+def apply_gqa(cfg, p, x, positions, mode, cache=None, pos=None,
+              causal=True):
+    """positions (B, T) absolute; pos scalar int32 (decode write index)."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dh->bth", x, p["wq"]).reshape(B, T, H, hd)
+    k = jnp.einsum("btd,dh->bth", x, p["wk"]).reshape(B, T, KV, hd)
+    v = jnp.einsum("btd,dh->bth", x, p["wv"]).reshape(B, T, KV, hd)
+    q = apply_rope(q, positions, cfg.rope, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope, cfg.rope_theta)
+
+    new_cache = cache
+    if mode in ("train", "prefill"):
+        if causal:
+            mask = causal_mask(T, positions, positions)
+            if cfg.sliding_window:
+                mask &= (positions[:, None, :]
+                         > positions[:, :, None] - cfg.sliding_window)
+        else:
+            mask = jnp.ones((B, T, T), bool)
+        out = _sdpa(q, k, v, mask)
+        if mode == "prefill":
+            W = cache["k"].shape[1]
+            if W >= T:
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(
+                        cache["k"], k, (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        cache["v"], v, (0, 0, 0, 0))}
+            else:  # sliding window shorter than the prompt: keep the tail
+                new_cache = {"k": k[:, T - W:], "v": v[:, T - W:]}
+    else:  # decode: T == 1, write at pos (mod window), attend over cache
+        W = cache["k"].shape[1]
+        slot = pos % W if cfg.sliding_window else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        valid = jnp.arange(W)[None, None, :] <= jnp.minimum(pos, W - 1)
+        mask = jnp.broadcast_to(valid, (B, 1, W))
+        out = _sdpa(q, ck, cv, mask)
+    y = jnp.einsum("btx,xd->btd", out.reshape(B, T, H * hd), p["wo"])
+    return y, new_cache
+
+
+# -- cross-attention (whisper decoder) ----------------------------------------
+
+def init_cross(cfg, key, dtype):
+    return init_gqa(cfg, key, dtype)
+
+
+def init_cross_cache(cfg, B, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((B, cfg.n_frames, KV, hd), dtype),
+            "v": jnp.zeros((B, cfg.n_frames, KV, hd), dtype)}
+
+
+def apply_cross(cfg, p, x, memory, mode, cache=None):
+    """memory: encoder output (B, S_enc, d); no positional rotation
+    (whisper uses learned absolute positions)."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dh->bth", x, p["wq"]).reshape(B, T, H, hd)
+    if mode == "decode":
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        S = memory.shape[1]
+        k = jnp.einsum("bsd,dh->bsh", memory, p["wk"]).reshape(B, S, KV, hd)
+        v = jnp.einsum("bsd,dh->bsh", memory, p["wv"]).reshape(B, S, KV, hd)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else cache
+    mask = jnp.ones((B, T, k.shape[1]), bool)
+    out = _sdpa(q, k, v, mask)
+    y = jnp.einsum("btx,xd->btd", out.reshape(B, T, H * hd), p["wo"])
+    return y, new_cache
+
+
+# -- MLA (DeepSeek-V2) ---------------------------------------------------------
+
+def _mla_absorbed(cfg, p, q_nope, q_rope, c_all, kr_all, mask):
+    """Decode-time weight absorption (DeepSeek-V2 §2.1.2): fold W^UK into
+    the query and W^UV into the output so attention runs DIRECTLY on the
+    compressed cache. Algebraically identical to expanding per-head K/V,
+    but never materializes the (B, S, H, qk+vh) tensor — per step it turns
+    an O(S·H·(qk+vh)·r) expansion into O(T·H·qk·r). This is the paper's
+    compile-time-folding principle applied to the attention algebra; the
+    naive-expansion baseline is kept in EXPERIMENTS.md §Perf."""
+    B, T, H, qk = q_nope.shape
+    r, rp = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    vh = cfg.v_head_dim
+    wkv_b = p["wkv_b"].reshape(r, H, qk + vh)
+    w_k, w_v = wkv_b[..., :qk], wkv_b[..., qk:]
+
+    q_eff = jnp.einsum("bthc,rhc->bthr", q_nope, w_k)      # absorb W^UK
+    scores = (jnp.einsum("bthr,bsr->bhts", q_eff, c_all)
+              + jnp.einsum("bthc,bsc->bhts", q_rope, kr_all)) \
+        .astype(jnp.float32) / jnp.sqrt(qk + rp).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(c_all.dtype)
+    ctx = jnp.einsum("bhts,bsr->bthr", w, c_all)           # attend in r-space
+    out = jnp.einsum("bthr,rhv->bthv", ctx, w_v)           # absorb W^UV
+    return jnp.einsum("btx,xd->btd", out.reshape(B, T, H * vh), p["wo"])
+
+def init_mla(cfg, key, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    qk, rp, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, qr), dtype),
+        "q_norm": jnp.ones((qr,), dtype),
+        "wq_b": dense_init(ks[1], (qr, H * (qk + rp)), dtype),
+        "wkv_a": dense_init(ks[2], (d, r + rp), dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+        "wkv_b": dense_init(ks[3], (r, H * (qk + vh)), dtype),
+        "wo": dense_init(ks[4], (H * vh, d), dtype),
+    }
+
+
+def init_mla_cache(cfg, B, S, dtype):
+    return {"ckv": jnp.zeros((B, S, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((B, S, cfg.qk_rope_head_dim), dtype)}
+
+
+def _rms(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)) \
+        .astype(x.dtype)
+
+
+def apply_mla(cfg, p, x, positions, mode, cache=None, pos=None):
+    """Compressed-KV attention: the cache holds c_kv (rank r) + the shared
+    rope key — the 93% KV-cache reduction of the DeepSeek-V2 paper."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    r, rp = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    qk, vh = cfg.qk_nope_head_dim, cfg.v_head_dim
+
+    # queries
+    q_c = _rms(jnp.einsum("btd,dr->btr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("btr,rh->bth", q_c, p["wq_b"]).reshape(B, T, H, qk + rp)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = apply_rope(q_rope, positions, "standard", cfg.rope_theta)
+
+    # compressed kv for the current tokens
+    kv_a = jnp.einsum("btd,dr->btr", x, p["wkv_a"])
+    c_kv = _rms(kv_a[..., :r], p["kv_norm"])                  # (B, T, r)
+    k_rope = apply_rope(kv_a[..., r:][:, :, None, :], positions, "standard",
+                        cfg.rope_theta)[:, :, 0, :]           # (B, T, rp)
+
+    new_cache = cache
+    if mode == "decode":
+        S = cache["ckv"].shape[1]
+        c_all = jax.lax.dynamic_update_slice(cache["ckv"], c_kv, (0, pos, 0))
+        kr_all = jax.lax.dynamic_update_slice(cache["krope"], k_rope,
+                                              (0, pos, 0))
+        new_cache = {"ckv": c_all, "krope": kr_all}
+        mask = jnp.broadcast_to(
+            jnp.arange(S)[None, None, :] <= pos, (B, T, S))
+        if getattr(cfg, "mla_absorb", True):
+            return _mla_absorbed(cfg, p, q_nope, q_rope, c_all, kr_all,
+                                 mask), new_cache
+    else:
+        c_all, kr_all = c_kv, k_rope
+        mask = causal_mask(T, positions, positions)
+        if mode == "prefill":
+            S = cache["ckv"].shape[1]
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice(cache["ckv"], c_kv,
+                                                    (0, 0, 0)),
+                "krope": jax.lax.dynamic_update_slice(cache["krope"], k_rope,
+                                                      (0, 0, 0))}
+
+    # expand compressed cache to per-head keys/values
+    kv = jnp.einsum("bsr,rh->bsh", c_all, p["wkv_b"]) \
+            .reshape(B, -1, H, qk + vh)
+    k_nope, v = kv[..., :qk], kv[..., qk:]
+
+    scores = (jnp.einsum("bthc,bshc->bhts", q_nope, k_nope)
+              + jnp.einsum("bthc,bsc->bhts", q_rope, kr_all)) \
+        .astype(jnp.float32) / jnp.sqrt(qk + rp).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhts,bshc->bthc", w, v).reshape(B, T, H * vh)
+    return jnp.einsum("btx,xd->btd", out, p["wo"]), new_cache

@@ -1,0 +1,64 @@
+"""Shared building blocks: norms, MLPs, embeddings, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def init_norm(cfg, d, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_norm(cfg, p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gated_rmsnorm(x, z, scale, eps=1e-5):
+    """Mamba2's RMSNormGated: norm(x * silu(z))."""
+    xf = (x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)) \
+        .astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- MLPs ----------------------------------------------------------------------
+
+def init_mlp(cfg, key, d, ff, dtype):
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind == "swiglu":
+        return {"w_gate": dense_init(ks[0], (d, ff), dtype),
+                "w_up": dense_init(ks[1], (d, ff), dtype),
+                "w_down": dense_init(ks[2], (ff, d), dtype)}
+    return {"w_in": dense_init(ks[0], (d, ff), dtype),
+            "w_out": dense_init(ks[1], (ff, d), dtype)}
+
+
+def apply_mlp(cfg, p, x):
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return jnp.einsum("...f,fd->...d", h, p["w_down"])
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])

@@ -1,0 +1,144 @@
+"""Top-level model: embeddings, frontend stubs (VLM patches / audio frames),
+encoder (Whisper), decoder stack, LM head.
+
+Public API (all functional):
+  init_params(cfg, key, dtype, max_seq)        -> params pytree
+  init_cache(cfg, B, S, dtype)                 -> decode cache pytree
+  forward(cfg, params, batch)                  -> (logits, aux)   [training]
+  prefill(cfg, params, batch, cache)           -> (last_logits, cache)
+  decode_step(cfg, params, tokens, cache, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_norm, dense_init, init_norm
+from .transformer import (apply_stack, init_stack, init_stack_cache)
+from repro.configs.base import LayerDef
+
+ENC_PATTERN = [LayerDef(mixer="gqa", mlp="dense", cross_attn=False)]
+
+
+def _dec_pattern(cfg):
+    pat = cfg.pattern()
+    if cfg.encoder_layers:  # whisper decoder layers get cross-attention
+        pat = [LayerDef(mixer=ld.mixer, mlp=ld.mlp, cross_attn=True)
+               for ld in pat]
+    return pat
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16, max_seq=4096):
+    ks = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.vocab_size
+    p = {
+        "embed": dense_init(ks[0], (V, d), dtype, scale=0.02),
+        "final_norm": init_norm(cfg, d, dtype),
+        "lm_head": dense_init(ks[1], (d, V), dtype),
+    }
+    if cfg.modality == "vision":
+        p["projector"] = {
+            "w": dense_init(ks[2], (cfg.frontend_dim, d), dtype),
+            "b": jnp.zeros((d,), dtype),
+        }
+    if cfg.rope == "learned":
+        p["dec_pos"] = dense_init(ks[3], (max_seq, d), dtype, scale=0.02)
+    if cfg.encoder_layers:
+        p["enc_pos"] = dense_init(ks[4], (cfg.n_frames, d), dtype,
+                                  scale=0.02)
+        p["encoder"] = init_stack(cfg, ENC_PATTERN, cfg.encoder_layers,
+                                  ks[5], dtype)
+        p["enc_norm"] = init_norm(cfg, d, dtype)
+    p["layers"] = init_stack(cfg, _dec_pattern(cfg), cfg.n_periods, ks[6],
+                             dtype)
+    return p
+
+
+def init_cache(cfg, B, S, dtype=jnp.bfloat16):
+    return {"layers": init_stack_cache(cfg, _dec_pattern(cfg), cfg.n_periods,
+                                       B, S, dtype)}
+
+
+def encode(cfg, params, frames):
+    """Whisper encoder over STUB conv-frontend frame embeddings
+    (B, n_frames, d_model)."""
+    x = frames + params["enc_pos"][None]
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1])[None],
+                           frames.shape[:2])
+    x, _, _ = apply_stack(cfg, ENC_PATTERN, params["encoder"], x, pos,
+                          "train", causal=False)
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _embed(cfg, params, tokens, positions):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.rope == "learned":
+        x = x + jnp.take(params["dec_pos"], positions, axis=0)
+    return x
+
+
+def _assemble_inputs(cfg, params, batch, pos_offset=0):
+    """Returns (x, positions, memory, n_prefix).
+
+    vision: projected patch embeddings are prepended to the text tokens —
+    the cross-modal interleave; loss/logits for the text part only.
+    audio: memory = encoded frames for cross-attention.
+    """
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    memory = None
+    n_prefix = 0
+    if cfg.modality == "vision" and "patches" in batch:
+        proj = (jnp.einsum("bpf,fd->bpd", batch["patches"],
+                           params["projector"]["w"])
+                + params["projector"]["b"])
+        n_prefix = proj.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(T + n_prefix)[None], (B, T + n_prefix)) + pos_offset
+        x = jnp.concatenate(
+            [proj.astype(params["embed"].dtype),
+             _embed(cfg, params, tokens, positions[:, n_prefix:])], axis=1)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T)) + pos_offset
+        x = _embed(cfg, params, tokens, positions)
+    if cfg.encoder_layers and "frames" in batch:
+        memory = encode(cfg, params, batch["frames"])
+    return x, positions, memory, n_prefix
+
+
+def forward(cfg, params, batch, remat=False):
+    """Training forward: logits over every position (text positions only for
+    VLM — patch positions are sliced off)."""
+    x, positions, memory, n_prefix = _assemble_inputs(cfg, params, batch)
+    x, _, aux = apply_stack(cfg, _dec_pattern(cfg), params["layers"], x,
+                            positions, "train", memory=memory, remat=remat)
+    x = apply_norm(cfg, params["final_norm"], x)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    return logits, aux
+
+
+def prefill(cfg, params, batch, cache):
+    """Fill the cache from the prompt; return last-token logits + cache."""
+    x, positions, memory, n_prefix = _assemble_inputs(cfg, params, batch)
+    x, caches, _ = apply_stack(cfg, _dec_pattern(cfg), params["layers"], x,
+                               positions, "prefill", caches=cache["layers"],
+                               memory=memory)
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    return logits, {"layers": caches}
+
+
+def decode_step(cfg, params, tokens, cache, pos):
+    """ONE token (B, 1) against a cache of capacity S; write index ``pos``.
+    The cache argument is donated by the serve step (ownership transfer)."""
+    B = tokens.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x = _embed(cfg, params, tokens, positions)
+    x, caches, _ = apply_stack(cfg, _dec_pattern(cfg), params["layers"], x,
+                               positions, "decode", caches=cache["layers"],
+                               pos=pos)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    return logits, {"layers": caches}

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts with expert-parallel sharding.
+
+Top-k routing with a static per-expert capacity; dispatch/combine via
+gather/scatter-add (FLOPs ∝ active experts, not total — the property the
+roofline MODEL_FLOPS check verifies). The expert dimension is sharded over
+the 'model' mesh axis; under GSPMD the gather materializes the per-shard
+token block and the combine reduces across the axis — the collective
+schedule the dry-run records. A shard_map all-to-all variant is evaluated
+in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, init_mlp, apply_mlp
+
+
+def init_moe(cfg, key, dtype):
+    d, E, eff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),  # router kept fp32
+        "w_gate": dense_init(ks[1], (E, d, eff), dtype),
+        "w_up": dense_init(ks[2], (E, d, eff), dtype),
+        "w_down": dense_init(ks[3], (E, eff, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4], d,
+                               cfg.n_shared_experts * eff, dtype)
+    return p
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(c, cfg.top_k)
+
+
+def _route_and_compute(cfg, p, xf, C):
+    """Dispatch + expert FFN + combine for one token group xf (n, d)."""
+    n, d = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (n, E)
+    gate_w, gate_e = jax.lax.top_k(probs, k)                   # (n, k)
+    gate_w = gate_w / jnp.sum(gate_w, -1, keepdims=True)
+
+    # Flatten assignments, rank tokens within their expert, drop overflow.
+    e_flat = gate_e.reshape(-1)                                # (n*k,)
+    t_flat = jnp.repeat(jnp.arange(n), k)
+    w_flat = gate_w.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    e_s, t_s, w_s = e_flat[order], t_flat[order], w_flat[order]
+    starts = jnp.searchsorted(e_s, jnp.arange(E), side="left")
+    rank = jnp.arange(n * k) - starts[e_s]
+    keep = rank < C
+    e_idx = jnp.where(keep, e_s, E)            # dropped -> dummy expert row
+    r_idx = jnp.where(keep, rank, 0)
+
+    dispatch = jnp.full((E + 1, C), n, jnp.int32) \
+        .at[e_idx, r_idx].set(t_s.astype(jnp.int32), mode="drop")[:E]
+    w_disp = jnp.zeros((E + 1, C), jnp.float32) \
+        .at[e_idx, r_idx].set(w_s, mode="drop")[:E]
+
+    xp = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], 0)  # pad row
+    xe = jnp.take(xp, dispatch, axis=0)                         # (E, C, d)
+
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    ye = ye * w_disp[..., None].astype(ye.dtype)
+
+    y = jnp.zeros((n + 1, d), ye.dtype) \
+        .at[dispatch.reshape(-1)].add(ye.reshape(-1, d), mode="drop")[:n]
+
+    # Switch-style load-balance loss.
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_e, E, dtype=jnp.float32).sum(1), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) / cfg.top_k
+    return y, aux
+
+
+# When set to a Mesh, apply_moe routes through the explicit shard_map
+# all-to-all dispatch (models/moe_a2a.py) — the hand-written expert-parallel
+# schedule evaluated in EXPERIMENTS.md §Perf. Trace-time configuration, set
+# by the dry-run/hillclimb driver.
+A2A_MESH = None
+
+
+def apply_moe(cfg, p, x):
+    """x (B, T, d) -> (y (B, T, d), aux_loss scalar fp32).
+
+    With ``cfg.moe_groups = G > 1`` the tokens are split into G groups
+    (batch-major, so groups align with the data shards) and every group
+    routes/dispatches independently with a group-local capacity —
+    DeepSeek-style device-limited routing. The dispatched tensor shrinks
+    from (E, C_global, d) to G × (E, C_global/G, d) group-local slabs,
+    which keeps the gather/scatter inside each data shard (§Perf)."""
+    B, T, d = x.shape
+    n = B * T
+    if A2A_MESH is not None:
+        S = dict(zip(A2A_MESH.axis_names, A2A_MESH.devices.shape)) \
+            .get("model", 1)
+        if S > 1 and cfg.n_experts % S == 0 and n % S == 0:
+            from .moe_a2a import moe_all_to_all
+            return moe_all_to_all(cfg, p, x, A2A_MESH)
+    G = cfg.moe_groups if cfg.moe_groups and cfg.moe_groups > 1 else 1
+    if G > 1 and n % G == 0 and (n // G) >= cfg.top_k:
+        xg = x.reshape(G, n // G, d)
+        C = capacity(cfg, n // G)
+        y, aux = jax.vmap(
+            lambda xf: _route_and_compute(cfg, p, xf, C))(xg)
+        y = y.reshape(n, d)
+        aux = jnp.mean(aux)
+    else:
+        y, aux = _route_and_compute(cfg, p, x.reshape(n, d), capacity(cfg, n))
+
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(cfg, p["shared"], x.reshape(n, d))
+
+    return y.reshape(B, T, d), aux

@@ -1,0 +1,213 @@
+"""Mamba2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+intra-chunk math on short chunks + a linear recurrence over chunk states
+(a lax.scan — the TPU-native mapping of the paper's kernel). Decode is the
+O(1) recurrent update on the cached (conv, state) pair. A step-by-step
+naive recurrence is provided as the test oracle.
+
+Recurrence (per head h, head channels P, state N):
+    a_t = exp(A * dt_t)                       A < 0 scalar per head
+    h_t = a_t h_{t-1} + dt_t * x_t ⊗ B_t
+    y_t = h_t · C_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, gated_rmsnorm
+
+
+def dims(cfg):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = 1
+    conv_dim = di + 2 * G * N
+    return di, H, P, N, G, conv_dim
+
+
+def init_ssm(cfg, key, dtype):
+    d = cfg.d_model
+    di, H, P, N, G, conv_dim = dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * G * N + H), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_kernel, conv_dim), dtype,
+                             scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def init_ssm_cache(cfg, B, dtype):
+    di, H, P, N, G, conv_dim = dims(cfg)
+    return {"conv": jnp.zeros((B, cfg.ssm_conv_kernel - 1, conv_dim), dtype),
+            "state": jnp.zeros((B, H, P, N), jnp.float32)}
+
+
+def _split(cfg, zxbcdt):
+    di, H, P, N, G, conv_dim = dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_dim]
+    dt = zxbcdt[..., di + conv_dim:]
+    return z, xbc, dt
+
+
+def _conv_full(cfg, xbc, p):
+    """Causal depthwise conv over time: (B, T, conv_dim)."""
+    k = cfg.ssm_conv_kernel
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, p["conv_w"][:, None, :], (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1])
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)) \
+        .astype(xbc.dtype)
+
+
+def _xbc_split(cfg, xbc_conv):
+    di, H, P, N, G, conv_dim = dims(cfg)
+    B_, T = xbc_conv.shape[:2]
+    x = xbc_conv[..., :di].reshape(B_, T, H, P)
+    Bm = xbc_conv[..., di:di + G * N].reshape(B_, T, G, N)
+    Cm = xbc_conv[..., di + G * N:].reshape(B_, T, G, N)
+    # G=1 groups broadcast over heads
+    Bm = jnp.broadcast_to(Bm, (B_, T, H, N)) if G == 1 else Bm
+    Cm = jnp.broadcast_to(Cm, (B_, T, H, N)) if G == 1 else Cm
+    return x, Bm, Cm
+
+
+def ssd_chunked(cfg, x, Bm, Cm, dt, A, h0=None):
+    """x (B,T,H,P), Bm/Cm (B,T,H,N), dt (B,T,H) fp32, A (H,) fp32.
+    Returns y (B,T,H,P) and final state (B,H,P,N)."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = cfg.ssm_chunk
+    T0 = T
+    if T % Q:  # pad tail with dt=0 (a=1, zero input -> state unchanged)
+        padn = Q - T % Q
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, padn)) + ((0, 0),) * (a.ndim - 2))
+        x, Bm, Cm, dt = pad(x), pad(Bm), pad(Cm), pad(dt)
+        T = T + padn
+    nc = T // Q
+
+    def chunk(a):
+        return a.reshape((Bsz, nc, Q) + a.shape[2:])
+
+    xc, Bc, Cc = chunk(x), chunk(Bm), chunk(Cm)
+    dtc = chunk(dt)                                  # (B,nc,Q,H) fp32
+    la = dtc * A                                     # log a_t  (negative)
+    L = jnp.cumsum(la, axis=2)                       # (B,nc,Q,H)
+
+    # intra-chunk (quadratic on Q)
+    scores = jnp.einsum("bcthn,bcshn->bchts", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    Lh = jnp.moveaxis(L, 3, 2)                       # (B,nc,H,Q)
+    decay = jnp.exp(Lh[..., :, None] - Lh[..., None, :])   # (B,nc,H,Q,Q)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    dts = jnp.moveaxis(dtc, 3, 2)[..., None, :]      # (B,nc,H,1,Q)
+    M = jnp.where(tri, scores * decay * dts, 0.0)
+    y_intra = jnp.einsum("bchts,bcshp->bcthp", M, xc.astype(jnp.float32))
+
+    # chunk states
+    w = jnp.exp(Lh[..., -1][..., None] - Lh) \
+        * jnp.moveaxis(dtc, 3, 2)                    # exp(L_Q - L_s)*dt_s (B,nc,H,Q)
+    S_c = jnp.einsum("bchs,bcshp,bcshn->bchpn", w, xc.astype(jnp.float32),
+                     Bc.astype(jnp.float32))         # (B,nc,H,P,N)
+    a_chunk = jnp.exp(Lh[..., -1])                   # (B,nc,H)
+
+    h_init = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def scan_body(h, inp):
+        s_c, a_c = inp                               # (B,H,P,N), (B,H)
+        h_out = h                                    # state entering the chunk
+        h = a_c[..., None, None] * h + s_c
+        return h, h_out
+
+    h_final, h_ins = jax.lax.scan(
+        scan_body, h_init,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                # (B,nc,H,P,N)
+
+    y_inter = jnp.exp(L)[..., None] * jnp.einsum(
+        "bcthn,bchpn->bcthp", Cc.astype(jnp.float32), h_ins)
+
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)[:, :T0]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_naive(cfg, x, Bm, Cm, dt, A, h0=None):
+    """Step-by-step oracle for tests."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    h = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def body(h, inp):
+        xt, bt, ct, dtt = inp                        # (B,H,P),(B,H,N),(B,H,N),(B,H)
+        a = jnp.exp(dtt * A)                         # (B,H)
+        h = (a[..., None, None] * h
+             + (dtt[..., None] * xt.astype(jnp.float32))[..., None]
+             * bt.astype(jnp.float32)[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct.astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(body, h,
+                         (jnp.moveaxis(x, 1, 0), jnp.moveaxis(Bm, 1, 0),
+                          jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(dt, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def apply_ssm(cfg, p, x, mode, cache=None, use_chunked=True):
+    """The full Mamba2 block body (in_proj → conv → SSD → gated norm →
+    out_proj). Returns (y, new_cache)."""
+    Bsz, T, d = x.shape
+    di, H, P, N, G, conv_dim = dims(cfg)
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"])
+    z, xbc, dt_raw = _split(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    new_cache = cache
+    if mode == "decode":
+        k = cfg.ssm_conv_kernel
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,k,conv)
+        conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                              p["conv_w"].astype(jnp.float32))
+        xbc_c = jax.nn.silu(conv_out
+                            + p["conv_b"].astype(jnp.float32)) \
+            .astype(x.dtype)[:, None, :]
+        xs, Bm, Cm = _xbc_split(cfg, xbc_c)
+        xt, bt, ct = xs[:, 0], Bm[:, 0], Cm[:, 0]
+        dtt = dt[:, 0]
+        a = jnp.exp(dtt * A)
+        h = (a[..., None, None] * cache["state"]
+             + (dtt[..., None] * xt.astype(jnp.float32))[..., None]
+             * bt.astype(jnp.float32)[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct.astype(jnp.float32))
+        y = y + p["D"][:, None] * xt.astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)               # (B,1,H,P)
+        new_cache = {"conv": window[:, 1:], "state": h}
+    else:
+        xbc_c = _conv_full(cfg, xbc, p)
+        xs, Bm, Cm = _xbc_split(cfg, xbc_c)
+        fn = ssd_chunked if use_chunked else ssd_naive
+        y, h_final = fn(cfg, xs, Bm, Cm, dt, A)
+        y = y + (p["D"][:, None] * xs.astype(jnp.float32)).astype(y.dtype)
+        if mode == "prefill":
+            k = cfg.ssm_conv_kernel
+            new_cache = {"conv": xbc[:, T - (k - 1):].astype(
+                             cache["conv"].dtype if cache else x.dtype),
+                         "state": h_final}
+
+    y = y.reshape(Bsz, T, di)
+    y = gated_rmsnorm(y, z, p["norm_scale"])
+    return jnp.einsum("bte,ed->btd", y, p["w_out"]), new_cache

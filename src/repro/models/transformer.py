@@ -1,0 +1,162 @@
+"""Layer stacks: heterogeneous patterns (Jamba), scan-over-periods for
+compact HLO at any depth, optional remat for training."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+# -- single layer -------------------------------------------------------------
+
+def init_layer(cfg, ld, key, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_norm(cfg, cfg.d_model, dtype)}
+    if ld.mixer == "gqa":
+        p["mixer"] = attn.init_gqa(cfg, ks[0], dtype)
+    elif ld.mixer == "mla":
+        p["mixer"] = attn.init_mla(cfg, ks[0], dtype)
+    elif ld.mixer == "ssm":
+        p["mixer"] = ssm_mod.init_ssm(cfg, ks[0], dtype)
+    if ld.cross_attn:
+        p["norm_x"] = init_norm(cfg, cfg.d_model, dtype)
+        p["cross"] = attn.init_cross(cfg, ks[1], dtype)
+    if ld.mlp == "dense":
+        p["norm2"] = init_norm(cfg, cfg.d_model, dtype)
+        p["mlp"] = init_mlp(cfg, ks[2], cfg.d_model, cfg.d_ff, dtype)
+    elif ld.mlp == "moe":
+        p["norm2"] = init_norm(cfg, cfg.d_model, dtype)
+        p["mlp"] = moe_mod.init_moe(cfg, ks[2], dtype)
+    return p
+
+
+def init_layer_cache(cfg, ld, B, S, dtype):
+    c = {}
+    if ld.mixer == "gqa":
+        c["mixer"] = attn.init_gqa_cache(cfg, B, S, dtype)
+    elif ld.mixer == "mla":
+        c["mixer"] = attn.init_mla_cache(cfg, B, S, dtype)
+    elif ld.mixer == "ssm":
+        c["mixer"] = ssm_mod.init_ssm_cache(cfg, B, dtype)
+    if ld.cross_attn:
+        c["cross"] = attn.init_cross_cache(cfg, B, dtype)
+    return c
+
+
+def apply_layer(cfg, ld, p, x, positions, mode, cache=None, pos=None,
+                memory=None, causal=True):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache else {}
+
+    h = apply_norm(cfg, p["norm1"], x)
+    if ld.mixer == "gqa":
+        y, mc = attn.apply_gqa(cfg, p["mixer"], h, positions, mode,
+                               cache.get("mixer") if cache else None, pos,
+                               causal=causal)
+    elif ld.mixer == "mla":
+        y, mc = attn.apply_mla(cfg, p["mixer"], h, positions, mode,
+                               cache.get("mixer") if cache else None, pos)
+    elif ld.mixer == "ssm":
+        y, mc = ssm_mod.apply_ssm(cfg, p["mixer"], h, mode,
+                                  cache.get("mixer") if cache else None)
+    else:
+        y, mc = jnp.zeros_like(x), None
+    x = x + y
+    if mc is not None:
+        new_cache["mixer"] = mc
+
+    if ld.cross_attn:
+        h = apply_norm(cfg, p["norm_x"], x)
+        y, cc = attn.apply_cross(cfg, p["cross"], h, memory, mode,
+                                 cache.get("cross") if cache else None)
+        x = x + y
+        if cc is not None:
+            new_cache["cross"] = cc
+
+    if ld.mlp == "dense":
+        h = apply_norm(cfg, p["norm2"], x)
+        x = x + apply_mlp(cfg, p["mlp"], h)
+    elif ld.mlp == "moe":
+        h = apply_norm(cfg, p["norm2"], x)
+        y, aux_l = moe_mod.apply_moe(cfg, p["mlp"], h)
+        x = x + y
+        aux = aux + aux_l
+
+    return x, (new_cache or None), aux
+
+
+# -- stack --------------------------------------------------------------------
+
+def init_stack(cfg, pattern, n_periods, key, dtype):
+    """Returns a list (one entry per pattern position) of pytrees whose
+    leaves are stacked over periods: leaf shape (n_periods, ...)."""
+    out = []
+    for i, ld in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), n_periods)
+        per = [init_layer(cfg, ld, k, dtype) for k in keys]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    return out
+
+
+def init_stack_cache(cfg, pattern, n_periods, B, S, dtype):
+    out = []
+    for ld in pattern:
+        c = init_layer_cache(cfg, ld, B, S, dtype)
+        out.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy(), c))
+    return out
+
+
+# When True, layer stacks trace as a python loop instead of lax.scan.
+# Used by the roofline benchmark: XLA's cost_analysis counts a while-loop
+# body ONCE regardless of trip count, so per-layer costs are measured on
+# unrolled shallow-depth compiles (see benchmarks/bench_roofline.py).
+UNROLL_STACK = False
+
+
+def apply_stack(cfg, pattern, params, x, positions, mode, caches=None,
+                pos=None, memory=None, causal=True, remat=False):
+    """Scan over periods. Returns (x, new_caches, aux)."""
+    use_cache = caches is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        if use_cache:
+            slices, cache_slices = xs
+        else:
+            slices, cache_slices = xs, [None] * len(pattern)
+        new_caches = []
+        for ld, ps, cs in zip(pattern, slices, cache_slices):
+            x, nc, a = apply_layer(cfg, ld, ps, x, positions, mode, cs, pos,
+                                   memory, causal)
+            aux = aux + a
+            new_caches.append(nc if nc is not None else {})
+        return (x, aux), (tuple(new_caches) if use_cache else None)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    xs_tree = (tuple(params), tuple(caches)) if use_cache else tuple(params)
+
+    if UNROLL_STACK:  # python loop — every layer's ops appear in the HLO
+        n_periods = jax.tree.leaves(params)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys_list = []
+        for i in range(n_periods):
+            xs_i = jax.tree.map(lambda a: a[i], xs_tree)
+            carry, y = body(carry, xs_i)
+            ys_list.append(y)
+        (x, aux) = carry
+        if use_cache:
+            ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys_list)
+            return x, list(ys), aux
+        return x, None, aux
+
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                xs_tree)
+    new_caches = list(ys) if use_cache else None
+    return x, new_caches, aux

@@ -1,0 +1,72 @@
+"""Weight-only int8 quantization for the serving path — the paper's
+technique (Eq. 1, symmetric per-output-channel, compile-time scales) applied
+at LLM scale. Weights are stored int8 (4× smaller than bf16/f32 — directly
+cuts the memory roofline term of decode); the dequantize is traced INSIDE
+the serve step so XLA fuses it into the consuming matmul, exactly like the
+MicroFlow kernel applying its folded rescale constant.
+
+The full-integer folded path (activations int8 too, Eqs. 3–18) lives in
+repro.core and is used for the TinyML-scale models; at LLM serving scale we
+keep activations bf16 (weight-only PTQ), the standard accuracy-safe choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """int8 values + per-output-channel scales (Eq. 1 with Z = 0)."""
+    q: jnp.ndarray        # int8
+    scale: jnp.ndarray    # float32, shape (out_channels,)
+    orig_dtype: str = "float32"
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.orig_dtype
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def dequantize(self):
+        return (self.q.astype(jnp.float32) * self.scale) \
+            .astype(jnp.dtype(self.orig_dtype))
+
+
+def _is_q(leaf):
+    return isinstance(leaf, QuantizedTensor)
+
+
+def quantize_params(params, min_size: int = 1 << 12):
+    """int8-quantize every float matrix leaf (per-output-channel, symmetric).
+    Small leaves (norms, biases) stay float."""
+
+    def q(leaf):
+        if (not hasattr(leaf, "dtype")
+                or not jnp.issubdtype(leaf.dtype, jnp.floating)
+                or leaf.ndim < 2 or leaf.size < min_size):
+            return leaf
+        f = leaf.astype(jnp.float32)
+        red = tuple(range(leaf.ndim - 1))  # all but the output channel
+        absmax = jnp.maximum(jnp.max(jnp.abs(f), axis=red), 1e-9)
+        scale = (absmax / 127.0).astype(jnp.float32)
+        qv = jnp.clip(jnp.round(f / scale), -127, 127).astype(jnp.int8)
+        return QuantizedTensor(qv, scale, str(leaf.dtype))
+
+    return jax.tree.map(q, params)
+
+
+def dequantize_params(qparams):
+    """Traced inside the serve step: int8 -> compute dtype (fused by XLA)."""
+    return jax.tree.map(
+        lambda leaf: leaf.dequantize() if _is_q(leaf) else leaf,
+        qparams, is_leaf=_is_q)
+
+
+def param_bytes(tree) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree))

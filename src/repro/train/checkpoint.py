@@ -1,0 +1,62 @@
+"""Checkpointing: pytree <-> msgpack (paths + raw array bytes), atomic
+write, step-indexed directory layout. No orbax dependency."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        items.append((key, str(arr.dtype), list(arr.shape), arr.tobytes()))
+    return items, treedef
+
+
+def save(tree, path: str) -> None:
+    items, _ = _flatten(tree)
+    doc = [{"key": k, "dtype": d, "shape": s, "data": b}
+           for k, d, s, b in items]
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    with os.fdopen(fd, "wb") as f:
+        f.write(msgpack.packb(doc, use_bin_type=True))
+    os.replace(tmp, path)  # atomic
+
+
+def restore(template, path: str):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with open(path, "rb") as f:
+        doc = msgpack.unpackb(f.read(), raw=False)
+    by_key = {d["key"]: d for d in doc}
+    items, treedef = _flatten(template)
+    leaves = []
+    for key, dtype, shape, _ in items:
+        d = by_key[key]
+        assert d["shape"] == shape and d["dtype"] == dtype, \
+            (key, d["shape"], shape, d["dtype"], dtype)
+        arr = np.frombuffer(d["data"], dtype=d["dtype"]).reshape(d["shape"])
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f.split("_")[1].split(".")[0])
+             for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".msgpack")]
+    return max(steps) if steps else None
+
+
+def step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step}.msgpack")

@@ -1,0 +1,86 @@
+"""Loss + train step. The step is a single jitted program with params and
+optimizer state donated (the MicroFlow ownership discipline applied at
+framework scale: inputs are moved, not copied)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import adamw
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def _chunked_ce(x, lm_head, labels, chunk: int):
+    """Cross-entropy WITHOUT materializing the full (tokens, V) f32 logits:
+    the vocabulary is processed in static chunks (python loop — fully
+    visible to cost_analysis) with a running max/denominator. Beyond-paper
+    §Perf optimization: the peak logits buffer shrinks from V to `chunk`
+    columns. Exact (online-softmax identity), not an approximation."""
+    V = lm_head.shape[-1]
+    B, T, d = x.shape
+    m = jnp.full((B, T), -jnp.inf, jnp.float32)   # running max
+    s = jnp.zeros((B, T), jnp.float32)            # running Σ exp(l - m)
+    for k0 in range(0, V, chunk):
+        w = jax.lax.slice_in_dim(lm_head, k0, min(k0 + chunk, V), axis=1)
+        lg = jnp.einsum("btd,dv->btv", x, w).astype(jnp.float32)
+        m_new = jnp.maximum(m, jnp.max(lg, axis=-1))
+        s = s * jnp.exp(m - m_new) \
+            + jnp.sum(jnp.exp(lg - m_new[..., None]), axis=-1)
+        m = m_new
+    logz = m + jnp.log(s)
+    # gold logit: gather the label column of lm_head, one dot per token
+    w_gold = jnp.take(lm_head, labels, axis=1)    # (d, B, T)
+    gold = jnp.einsum("btd,dbt->bt", x, w_gold).astype(jnp.float32)
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(cfg, params, batch, remat=False, chunked_ce: int = 0):
+    labels = batch["labels"]
+    if chunked_ce:
+        from repro.models.model import (_assemble_inputs, apply_norm,
+                                        apply_stack, _dec_pattern)
+        x, positions, memory, n_prefix = _assemble_inputs(cfg, params, batch)
+        x, _, aux = apply_stack(cfg, _dec_pattern(cfg), params["layers"], x,
+                                positions, "train", memory=memory,
+                                remat=remat)
+        x = apply_norm(cfg, params["final_norm"], x)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        ce = _chunked_ce(x, params["lm_head"], labels, chunked_ce)
+    else:
+        logits, aux = M.forward(cfg, params, batch, remat=remat)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, remat=False,
+                    chunked_ce: int = 0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Pure function of its inputs — jit/shard at the call site."""
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat,
+                              chunked_ce=chunked_ce), has_aux=True)(params)
+        params, opt_state, opt_m = adamw.update(opt_cfg, grads, opt_state,
+                                                params)
+        metrics = {"loss": loss, **parts, **opt_m}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, parts = loss_fn(cfg, params, batch)
+        return {"loss": loss, **parts}
+    return eval_step

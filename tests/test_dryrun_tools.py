@@ -1,0 +1,79 @@
+"""Dry-run/roofline tooling tests (no 512-device compiles needed here)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import specs as SP
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = bf16[8,1024]{1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[64,128]{1,0} all-reduce(%y), channel_id=1
+  %ars = f32[64,128]{1,0} all-reduce-start(%y), channel_id=3
+  %tup = (f32[16]{0}, f32[16]{0}) all-to-all(%a, %b), dimensions={0}
+  %cp = u32[4]{0} collective-permute(%z), source_target_pairs=...
+  %not_a_coll = f32[999]{0} add(%p, %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"]["bytes"] == 8 * 1024 * 2
+    assert out["all-gather"]["count"] == 1
+    # all-reduce + all-reduce-start both counted as all-reduce traffic
+    assert out["all-reduce"]["bytes"] == 2 * 64 * 128 * 4
+    assert out["all-to-all"]["bytes"] == 2 * 16 * 4
+    assert out["collective-permute"]["bytes"] == 4 * 4
+    total = sum(v["bytes"] for v in out.values())
+    assert total == (8 * 1024 * 2 + 2 * 64 * 128 * 4 + 2 * 16 * 4 + 4 * 4)
+
+
+def test_input_specs_are_abstract():
+    """input_specs must allocate nothing — ShapeDtypeStructs only."""
+    for arch in ("starcoder2-3b", "kimi-k2-1t-a32b", "whisper-small",
+                 "mamba2-780m", "internvl2-26b"):
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "decode_32k"):
+            specs = SP.input_specs(cfg, INPUT_SHAPES[shape_name])
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+
+
+def test_input_specs_shapes_match_assignment():
+    cfg = get_config("starcoder2-3b")
+    s = SP.input_specs(cfg, INPUT_SHAPES["train_4k"])
+    assert s["batch"]["tokens"].shape == (256, 4096)
+    s = SP.input_specs(cfg, INPUT_SHAPES["decode_32k"])
+    assert s["tokens"].shape == (128, 1)
+    # full-attention arch on long_500k: cache capacity = sliding window
+    s = SP.input_specs(cfg, INPUT_SHAPES["long_500k"])
+    k_leaves = [l for p, l in
+                jax.tree_util.tree_flatten_with_path(s["cache"])[0]]
+    assert all(l.shape[2] == SP.SLIDING_WINDOW_500K for l in k_leaves
+               if l.ndim == 5)
+    # ssm arch: cache is O(1) state, no window
+    s = SP.input_specs(get_config("mamba2-780m"), INPUT_SHAPES["long_500k"])
+    for leaf in jax.tree.leaves(s["cache"]):
+        assert leaf.size < 1e9
+
+
+def test_model_flops_monotonic_shapes():
+    from benchmarks.bench_roofline import model_flops
+    cfg = get_config("internlm2-20b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    dc = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr == 3 * pf  # same token count, 6N vs 2N
+    assert dc < pf / 1000  # one token vs 32k
+
+
+def test_depth_cfg_scaling():
+    from benchmarks.bench_roofline import _depth_cfg, _units
+    jamba = get_config("jamba-v0.1-52b")
+    assert _units(jamba) == 4
+    d1 = _depth_cfg(jamba, 1)
+    assert d1.n_layers == 8  # one full pattern period
+    assert len(d1.pattern()) == 8
+    whisper = get_config("whisper-small")
+    d2 = _depth_cfg(whisper, 2)
+    assert d2.n_layers == 2 and d2.encoder_layers == 2

@@ -1,0 +1,171 @@
+"""Integration tests: compiled engine vs interpreter baseline vs float oracle,
+paging equivalence, AOT compilation, serialization."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompiledModel, Interpreter
+from repro.core import graph as G
+from repro.core.builder import GraphBuilder
+from repro.core.quantize import quantize_graph
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _mlp(rng, m=2, dims=(8, 16, 4), softmax=True):
+    b = GraphBuilder("mlp")
+    x = b.input("x", (m, dims[0]))
+    h = x
+    for i in range(len(dims) - 1):
+        w = rng.normal(0, 0.5, (dims[i], dims[i + 1])).astype("f")
+        bias = rng.normal(0, 0.5, dims[i + 1]).astype("f")
+        fused = "RELU" if i < len(dims) - 2 else "NONE"
+        h = b.fully_connected(h, w, bias, fused=fused, name=f"fc{i}")
+    if softmax:
+        h = b.softmax(h)
+    b.output(h)
+    return b.build()
+
+
+def _cnn(rng, bsz=1):
+    b = GraphBuilder("cnn")
+    x = b.input("x", (bsz, 12, 12, 3))
+    h = b.conv2d(x, rng.normal(0, 0.4, (3, 3, 3, 8)).astype("f"),
+                 rng.normal(size=8).astype("f"), stride=(2, 2),
+                 padding="SAME", fused="RELU6")
+    h = b.depthwise_conv2d(h, rng.normal(0, 0.4, (3, 3, 8, 1)).astype("f"),
+                           rng.normal(size=8).astype("f"), padding="SAME",
+                           fused="RELU")
+    h = b.average_pool2d(h, (6, 6))
+    h = b.reshape(h, (bsz, 8))
+    h = b.fully_connected(h, rng.normal(0, 0.4, (8, 4)).astype("f"), None)
+    h = b.softmax(h)
+    b.output(h)
+    return b.build()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_compiled_equals_interpreter_mlp(seed):
+    """Table 5's parity claim: the two engines compute the same model."""
+    rng = np.random.default_rng(seed)
+    g = _mlp(rng)
+    qg = quantize_graph(g, [rng.normal(size=(2, 8)).astype("f")
+                            for _ in range(4)])
+    x = rng.normal(size=(2, 8)).astype("f")
+    a = np.asarray(Interpreter(qg).invoke(x))
+    b = np.asarray(CompiledModel(qg).predict(x))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_compiled_equals_interpreter_cnn(seed):
+    rng = np.random.default_rng(seed)
+    g = _cnn(rng)
+    qg = quantize_graph(g, [rng.normal(size=(1, 12, 12, 3)).astype("f")
+                            for _ in range(4)])
+    x = rng.normal(size=(1, 12, 12, 3)).astype("f")
+    a = np.asarray(Interpreter(qg).invoke(x))
+    b = np.asarray(CompiledModel(qg).predict(x))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       n_pages=st.sampled_from([2, 4, 8, 16]))
+def test_paging_bit_identical(seed, n_pages):
+    """Sec. 4.3: paged execution must be a pure memory trade — identical
+    outputs."""
+    rng = np.random.default_rng(seed)
+    g = _mlp(rng, dims=(16, 16, 16), softmax=False)
+    qg = quantize_graph(g, [rng.normal(size=(2, 16)).astype("f")
+                            for _ in range(4)])
+    x = rng.normal(size=(2, 16)).astype("f")
+    base = np.asarray(CompiledModel(qg).predict(x))
+    paged = np.asarray(CompiledModel(qg, paged={0: n_pages,
+                                                1: n_pages}).predict(x))
+    np.testing.assert_array_equal(base, paged)
+
+
+def test_pallas_engine_matches_plain():
+    rng = np.random.default_rng(7)
+    g = _cnn(rng)
+    qg = quantize_graph(g, [rng.normal(size=(1, 12, 12, 3)).astype("f")
+                            for _ in range(4)])
+    x = rng.normal(size=(1, 12, 12, 3)).astype("f")
+    a = np.asarray(CompiledModel(qg).predict(x))
+    b = np.asarray(CompiledModel(qg, use_pallas=True).predict(x))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_aot_compile_and_analysis():
+    """The compiled engine is a real AOT artifact (Fig. 2's target binary)."""
+    rng = np.random.default_rng(3)
+    g = _mlp(rng)
+    qg = quantize_graph(g, [rng.normal(size=(2, 8)).astype("f")
+                            for _ in range(4)])
+    cm = CompiledModel(qg)
+    exe = cm.compile()
+    assert exe is not None
+    ca = cm.cost_analysis()
+    assert ca.get("flops", 0) > 0
+    x = rng.normal(size=(2, 8)).astype("f")
+    np.testing.assert_array_equal(np.asarray(cm.predict(x)),
+                                  np.asarray(Interpreter(qg).invoke(x)))
+
+
+def test_float_graph_both_engines():
+    rng = np.random.default_rng(11)
+    g = _mlp(rng)
+    x = rng.normal(size=(2, 8)).astype("f")
+    a = np.asarray(Interpreter(g).invoke(x))
+    b = np.asarray(CompiledModel(g).predict(x))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_serialization_roundtrip():
+    rng = np.random.default_rng(5)
+    g = _cnn(rng)
+    qg = quantize_graph(g, [rng.normal(size=(1, 12, 12, 3)).astype("f")
+                            for _ in range(4)])
+    path = os.path.join(tempfile.mkdtemp(), "m.mfg")
+    G.save(qg, path)
+    qg2 = G.load(path)
+    x = rng.normal(size=(1, 12, 12, 3)).astype("f")
+    np.testing.assert_array_equal(np.asarray(CompiledModel(qg).predict(x)),
+                                  np.asarray(CompiledModel(qg2).predict(x)))
+
+
+def test_calibration_not_corrupted_by_arena_reuse():
+    """Regression: calibrate() must see pristine intermediate tensors, not
+    arena views that later ops overwrite. A CNN (whose conv output is dead
+    after the FC consumes it) catches this: with a corrupted calibration the
+    int8 model's argmax disagrees with fp32 almost always."""
+    from repro.configs.paper_models import build_speech
+    rng = np.random.default_rng(0)
+    gen = lambda: rng.normal(0, 1, (1, 49, 40, 1)).astype("f")
+    g = build_speech(None, 1)
+    qg = quantize_graph(g, [gen() for _ in range(8)])
+    fi, qi = Interpreter(g), Interpreter(qg)
+    agree = sum(
+        int(np.argmax(np.asarray(fi.invoke(x))) ==
+            np.argmax(np.asarray(qi.invoke(x))))
+        for x in (gen() for _ in range(20)))
+    assert agree >= 18, agree
+
+
+def test_quantization_tracks_float_on_trained_scale_model():
+    """Small-weight (trained-like) model: int8 output close to float."""
+    rng = np.random.default_rng(13)
+    g = _mlp(rng, dims=(8, 16, 16, 4), softmax=True)
+    rep = [rng.normal(size=(2, 8)).astype("f") for _ in range(16)]
+    qg = quantize_graph(g, rep)
+    errs = []
+    for _ in range(16):
+        x = rng.normal(size=(2, 8)).astype("f")
+        f = np.asarray(Interpreter(g).invoke(x))
+        q = np.asarray(CompiledModel(qg).predict(x))
+        errs.append(np.abs(f - q).max())
+    assert np.median(errs) < 0.25, errs

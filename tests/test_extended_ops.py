@@ -1,0 +1,111 @@
+"""Extended operator set (paper Sec. 7 future work): MaxPool2D, residual
+ADD, Pad — enough for MobileNetV2/ResNet-class models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompiledModel, Interpreter
+from repro.core import graph as G
+from repro.core import ops_ref as K
+from repro.core.builder import GraphBuilder
+from repro.core.quantize import quantize_graph
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_add_q_tracks_float(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-3, 3, (2, 5)).astype("f")
+    b = rng.uniform(-2, 2, (2, 5)).astype("f")
+    s_a, z_a = np.float32(6 / 255), np.int32(0)
+    s_b, z_b = np.float32(4 / 255), np.int32(0)
+    s_y, z_y = np.float32(10 / 255), np.int32(0)
+    a_q = np.clip(np.round(a / s_a) + z_a, -128, 127).astype(np.int8)
+    b_q = np.clip(np.round(b / s_b) + z_b, -128, 127).astype(np.int8)
+    y = np.asarray(K.add_q(a_q, b_q, s_a=s_a, z_a=z_a, s_b=s_b, z_b=z_b,
+                           s_y=s_y, z_y=z_y))
+    deq = (y.astype("f") - z_y) * s_y
+    assert np.abs(deq - (a + b)).max() <= s_a / 2 + s_b / 2 + s_y + 1e-6
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       stride=st.sampled_from([(1, 1), (2, 2)]),
+       padding=st.sampled_from(["SAME", "VALID"]))
+def test_maxpool_q_tracks_float(seed, stride, padding):
+    rng = np.random.default_rng(seed)
+    # stay inside the representable range (z_x=3 shifts it to [-4.11, 3.89])
+    x = rng.uniform(-3.8, 3.8, (1, 8, 8, 3)).astype("f")
+    s_x, z_x = np.float32(8 / 255), np.int32(3)
+    x_q = np.clip(np.round(x / s_x) + z_x, -128, 127).astype(np.int8)
+    y = np.asarray(K.max_pool2d_q(
+        x_q, window=(2, 2), stride=stride, padding=padding,
+        s_x=s_x, z_x=z_x, s_y=s_x, z_y=z_x))
+    ref = np.asarray(K.max_pool2d_f(x, window=(2, 2), stride=stride,
+                                    padding=padding))
+    deq = (y.astype("f") - z_x) * s_x
+    assert np.abs(deq - ref).max() <= s_x + 1e-6
+
+
+def test_pad_q_uses_zero_point():
+    x_q = np.full((1, 2, 2, 1), 50, np.int8)
+    y = np.asarray(K.pad_q(x_q, pads=((0, 0), (1, 1), (1, 1), (0, 0)),
+                           z_x=np.int32(-7)))
+    assert y.shape == (1, 4, 4, 1)
+    assert y[0, 0, 0, 0] == -7  # quantized representation of real 0
+
+
+def _resnet_block(rng, bsz=1):
+    """MobileNetV2-style inverted residual: conv → dw → conv + ADD, plus
+    maxpool + pad on the stem."""
+    b = GraphBuilder("residual_cnn")
+    x = b.input("x", (bsz, 16, 16, 4))
+    h = b.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    h = b.conv2d(h, rng.normal(0, 0.3, (3, 3, 4, 8)).astype("f"),
+                 rng.normal(size=8).astype("f"), padding="VALID",
+                 fused="RELU6", name="stem")
+    h = b.max_pool2d(h, (2, 2))
+    skip = h                                   # (b, 8, 8, 8)
+    r = b.conv2d(h, rng.normal(0, 0.3, (1, 1, 8, 16)).astype("f"),
+                 rng.normal(size=16).astype("f"), fused="RELU6", name="exp")
+    r = b.depthwise_conv2d(r, rng.normal(0, 0.3, (3, 3, 16, 1)).astype("f"),
+                           rng.normal(size=16).astype("f"), padding="SAME",
+                           fused="RELU6", name="dw")
+    r = b.conv2d(r, rng.normal(0, 0.3, (1, 1, 16, 8)).astype("f"),
+                 rng.normal(size=8).astype("f"), name="proj")
+    h = b.add(skip, r)                         # residual
+    h = b.average_pool2d(h, (8, 8))
+    h = b.reshape(h, (bsz, 8))
+    h = b.fully_connected(h, rng.normal(0, 0.3, (8, 4)).astype("f"), None)
+    h = b.softmax(h)
+    b.output(h)
+    return b.build()
+
+
+def test_residual_cnn_both_engines():
+    rng = np.random.default_rng(0)
+    g = _resnet_block(rng)
+    gen = lambda: rng.normal(0, 1, (1, 16, 16, 4)).astype("f")
+    qg = quantize_graph(g, [gen() for _ in range(8)])
+    x = gen()
+    yi = np.asarray(Interpreter(qg).invoke(x))
+    yc = np.asarray(CompiledModel(qg).predict(x))
+    np.testing.assert_array_equal(yi, yc)
+    yf = np.asarray(Interpreter(g).invoke(x))
+    assert np.abs(yf - yc).max() < 0.15  # int8 tracks float through the skip
+
+
+def test_residual_cnn_serialization():
+    import os, tempfile
+    rng = np.random.default_rng(1)
+    g = _resnet_block(rng)
+    gen = lambda: rng.normal(0, 1, (1, 16, 16, 4)).astype("f")
+    qg = quantize_graph(g, [gen() for _ in range(4)])
+    path = os.path.join(tempfile.mkdtemp(), "r.mfg")
+    G.save(qg, path)
+    qg2 = G.load(path)
+    x = gen()
+    np.testing.assert_array_equal(
+        np.asarray(CompiledModel(qg).predict(x)),
+        np.asarray(CompiledModel(qg2).predict(x)))

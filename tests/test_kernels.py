@@ -1,0 +1,195 @@
+"""Per-kernel sweeps: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+across shapes and dtypes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ops_ref import FoldedConsts
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.qmatmul import qmatmul as qmatmul_raw
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _consts(rng, n, z_w_val=0):
+    bias = (rng.normal(size=n) * 5).astype(np.float32)
+    resc = (rng.random(n) * 0.02 + 1e-4).astype(np.float32)
+    wsum = rng.integers(-5000, 5000, n).astype(np.int32)
+    coff = rng.integers(-100, 100, n).astype(np.int32)
+    zw = np.full(n, z_w_val, np.int32)
+    return bias, resc, wsum, coff, zw
+
+
+def _fc(bias, resc, wsum, coff, zw, z_y=0, s_y=0.05, z_x=0):
+    return FoldedConsts(bias, resc, wsum, coff, zw, np.int32(z_y),
+                        np.float32(s_y), np.int32(z_x))
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (3, 7, 5), (16, 32, 8), (128, 128, 128),
+    (130, 257, 64), (1, 300, 200), (256, 128, 256),
+])
+def test_qmatmul_shapes(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+    c = _consts(rng, n, z_w_val=3)
+    out = np.asarray(kops.qmatmul_folded(jnp.asarray(x), jnp.asarray(w),
+                                         _fc(*c), "NONE"))
+    ref = np.asarray(kref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), *c))
+    np.testing.assert_array_equal(out, ref)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       fused=st.sampled_from(["NONE", "RELU", "RELU6"]),
+       zw=st.integers(-8, 8))
+def test_qmatmul_property(seed, fused, zw):
+    rng = np.random.default_rng(seed)
+    m, k, n = (int(rng.integers(1, 40)) for _ in range(3))
+    x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+    c = _consts(rng, n, z_w_val=zw)
+    fc = _fc(*c, z_y=int(rng.integers(-20, 20)), s_y=0.03)
+    out = np.asarray(kops.qmatmul_folded(jnp.asarray(x), jnp.asarray(w), fc,
+                                         fused))
+    lo, hi = kops._bounds(fc, fused)
+    ref = np.asarray(kref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), *c,
+                                      lo=lo, hi=hi))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_qmatmul_custom_blocks():
+    """Direct kernel call with non-default block shapes."""
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 384, 256
+    x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+    c = _consts(rng, n)
+    for bm, bn, bk in [(128, 128, 128), (64, 128, 128), (256, 128, 384)]:
+        out = np.asarray(qmatmul_raw(
+            jnp.asarray(x), jnp.asarray(w),
+            *(jnp.asarray(v) for v in c),
+            bm=bm, bn=bn, bk=bk, interpret=True))
+        ref = np.asarray(kref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), *c))
+        np.testing.assert_array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# paged_matmul — the Fig. 6 paging kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,page", [
+    (4, 16, 256, 128), (2, 64, 512, 128), (8, 32, 128, 128),
+])
+def test_paged_matmul_matches_ref(m, k, n, page):
+    rng = np.random.default_rng(n + page)
+    x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+    c = _consts(rng, n, z_w_val=-2)
+    out = np.asarray(kops.qmatmul_folded(jnp.asarray(x), jnp.asarray(w),
+                                         _fc(*c), "NONE", paged=True,
+                                         page=page))
+    ref = np.asarray(kref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), *c))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_paged_equals_unpaged_kernel():
+    rng = np.random.default_rng(42)
+    x = rng.integers(-128, 128, (7, 45)).astype(np.int8)
+    w = rng.integers(-128, 128, (45, 300)).astype(np.int8)
+    c = _consts(rng, 300)
+    a = np.asarray(kops.qmatmul_folded(jnp.asarray(x), jnp.asarray(w),
+                                       _fc(*c), "RELU"))
+    b = np.asarray(kops.qmatmul_folded(jnp.asarray(x), jnp.asarray(w),
+                                       _fc(*c), "RELU", paged=True))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# fmatmul — dtype sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (130, 70, 33)])
+def test_fmatmul_dtypes(dtype, m, k, n):
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype=dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)), dtype=dtype)
+    out = np.asarray(kops.fmatmul(x, w), np.float32)
+    ref = np.asarray(kref.fmatmul_ref(x, w), np.float32)
+    tol = 1e-5 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# qdwconv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw,c,kk,stride,padding", [
+    ((8, 8), 3, 3, (1, 1), "SAME"),
+    ((9, 9), 5, 3, (2, 2), "SAME"),
+    ((12, 10), 8, 5, (2, 2), "VALID"),
+    ((96, 96), 8, 3, (2, 2), "SAME"),   # person-detector first DW layer scale
+])
+def test_qdwconv_shapes(hw, c, kk, stride, padding):
+    rng = np.random.default_rng(c * 100 + kk)
+    x = rng.integers(-128, 128, (2, hw[0], hw[1], c)).astype(np.int8)
+    w = rng.integers(-128, 128, (kk, kk, c, 1)).astype(np.int8)
+    cst = _consts(rng, c, z_w_val=1)
+    fc = _fc(*cst, z_x=4)
+    out = np.asarray(kops.qdwconv_folded(jnp.asarray(x), jnp.asarray(w), fc,
+                                         stride=stride, padding=padding))
+    from repro.core.ops_ref import pad_input_q
+    xp = pad_input_q(jnp.asarray(x), kk, kk, stride, padding, fc.z_x)
+    ref = np.asarray(kref.qdwconv_ref(xp, jnp.asarray(w[..., 0]), *cst,
+                                      stride=stride))
+    np.testing.assert_array_equal(out, ref)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_qdwconv_property(seed):
+    rng = np.random.default_rng(seed)
+    h = int(rng.integers(5, 14))
+    w_ = int(rng.integers(5, 14))
+    c = int(rng.integers(1, 12))
+    kk = int(rng.choice([1, 3, 5]))
+    stride = (int(rng.choice([1, 2])),) * 2
+    padding = str(rng.choice(["SAME", "VALID"]))
+    if padding == "VALID" and (h < kk or w_ < kk):
+        return
+    x = rng.integers(-128, 128, (1, h, w_, c)).astype(np.int8)
+    wgt = rng.integers(-128, 128, (kk, kk, c, 1)).astype(np.int8)
+    cst = _consts(rng, c)
+    fc = _fc(*cst, z_x=int(rng.integers(-10, 10)))
+    out = np.asarray(kops.qdwconv_folded(jnp.asarray(x), jnp.asarray(wgt), fc,
+                                         stride=stride, padding=padding))
+    from repro.core.ops_ref import pad_input_q
+    xp = pad_input_q(jnp.asarray(x), kk, kk, stride, padding, fc.z_x)
+    ref = np.asarray(kref.qdwconv_ref(xp, jnp.asarray(wgt[..., 0]), *cst,
+                                      stride=stride))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_qdwconv_matches_engine_reference():
+    """Kernel agrees with the engine-level depthwise reference end to end."""
+    from repro.core import ops_ref as K
+    rng = np.random.default_rng(5)
+    c = 6
+    x = rng.integers(-128, 128, (1, 10, 10, c)).astype(np.int8)
+    w = rng.integers(-128, 128, (3, 3, c, 1)).astype(np.int8)
+    cst = _consts(rng, c, z_w_val=0)
+    fc = _fc(*cst, z_y=2, s_y=0.04, z_x=-3)
+    a = np.asarray(K.depthwise_conv2d_folded(
+        jnp.asarray(x), jnp.asarray(w), fc, stride=(1, 1), padding="SAME",
+        fused="RELU"))
+    b = np.asarray(kops.qdwconv_folded(
+        jnp.asarray(x), jnp.asarray(w), fc, stride=(1, 1), padding="SAME",
+        fused="RELU"))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,108 @@
+"""Memory-planner tests (paper Sec. 4): arena vs stack vs paging, including
+the paper's own ATmega328 numbers and hypothesis invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.builder import GraphBuilder
+from repro.core.memory import (fc_full_bytes, fc_page_bytes, liveness,
+                               memory_report, plan_arena, plan_paged,
+                               plan_stack)
+from repro.core.quantize import quantize_graph
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def test_paper_atmega_example():
+    """Sec. 4.3: a 32×32 dense layer needs ~5 kB unpaged; 32 pages → 163 B."""
+    assert fc_full_bytes(32, 32) == 5216  # "approximately 5kB"
+    assert fc_page_bytes(32, 32, 32) == 163
+
+
+def _random_mlp(seed, depth):
+    rng = np.random.default_rng(seed)
+    dims = rng.integers(4, 40, depth + 1)
+    b = GraphBuilder("m")
+    x = b.input("x", (1, int(dims[0])))
+    h = x
+    for i in range(depth):
+        w = rng.normal(0, 0.3, (int(dims[i]), int(dims[i + 1]))).astype("f")
+        h = b.fully_connected(h, w, rng.normal(size=int(dims[i + 1])).astype("f"),
+                              fused="RELU", name=f"fc{i}")
+    b.output(h)
+    g = b.build()
+    return quantize_graph(
+        g, [rng.normal(size=(1, int(dims[0]))).astype("f") for _ in range(2)])
+
+
+@given(seed=st.integers(0, 2**31 - 1), depth=st.integers(1, 6))
+def test_arena_plan_no_overlap(seed, depth):
+    """Property: tensors with overlapping lifetimes never share arena bytes."""
+    g = _random_mlp(seed, depth)
+    plan = plan_arena(g)
+    lt = plan.lifetimes
+    ids = list(plan.offsets)
+    for a in ids:
+        for b in ids:
+            if a >= b:
+                continue
+            la, lb = lt[a], lt[b]
+            if la.last < lb.first or lb.last < la.first:
+                continue  # disjoint lifetimes may alias
+            a0, a1 = plan.offsets[a], plan.offsets[a] + g.tensor(a).nbytes
+            b0, b1 = plan.offsets[b], plan.offsets[b] + g.tensor(b).nbytes
+            assert a1 <= b0 or b1 <= a0, (a, b)
+
+
+@given(seed=st.integers(0, 2**31 - 1), depth=st.integers(1, 6))
+def test_arena_at_least_two_largest_adjacent(seed, depth):
+    """The arena must hold each op's input+output simultaneously."""
+    g = _random_mlp(seed, depth)
+    plan = plan_arena(g)
+    for op in g.ops:
+        acts = [t for t in op.inputs if not g.tensor(t).is_const]
+        need = sum(g.tensor(t).nbytes for t in acts + list(op.outputs))
+        assert plan.arena_bytes >= need
+
+
+@given(seed=st.integers(0, 2**31 - 1), depth=st.integers(1, 6))
+def test_stack_peak_is_max_working_set(seed, depth):
+    g = _random_mlp(seed, depth)
+    plan = plan_stack(g)
+    assert plan.peak_bytes == max(plan.per_op)
+    assert plan.residual_bytes == 0  # ownership: nothing survives inference
+
+
+@given(seed=st.integers(0, 2**31 - 1), depth=st.integers(1, 4),
+       n_pages=st.sampled_from([2, 4]))
+def test_paging_never_increases_peak(seed, depth, n_pages):
+    """Sec. 4.3: paging trades time for memory — peak must not grow."""
+    g = _random_mlp(seed, depth)
+    # only page ops whose output dim divides n_pages
+    pages = {}
+    for i, op in enumerate(g.ops):
+        if op.op == "FULLY_CONNECTED":
+            n_out = g.tensor(op.inputs[1]).shape[1]
+            if n_out % n_pages == 0:
+                pages[i] = n_pages
+    if not pages:
+        return
+    base = plan_stack(g).peak_bytes
+    paged = plan_paged(g, pages).peak_bytes
+    assert paged <= base
+
+
+def test_liveness_graph_outputs_stay_live():
+    g = _random_mlp(0, 3)
+    lt = liveness(g)
+    for tid in g.outputs:
+        assert lt[tid].last == len(g.ops)
+
+
+def test_memory_report_fields():
+    g = _random_mlp(1, 3)
+    rep = memory_report(g)
+    assert rep.weight_bytes > 0
+    assert rep.arena_bytes > 0
+    assert rep.stack_peak_bytes >= rep.stack_peak_fused
+    assert rep.folded_const_bytes > 0
