@@ -1,5 +1,6 @@
 """Fig. 11 — inference latency, interpreter vs compiled engine (median of
-100 iterations), plus the Pallas-kernel variant."""
+100 iterations), plus the Pallas-kernel variant and batched-serving
+throughput (one AOT executable per power-of-two batch bucket)."""
 from __future__ import annotations
 
 import numpy as np
@@ -41,6 +42,16 @@ def main(fast: bool = False):
             lines.append(csv_line(
                 f"runtime/{name}_compiled_pallas_interp_us", us_p,
                 "pallas interpret=True (CPU validation mode, not perf)"))
+
+        # Batched serving: amortize dispatch over B requests in one call.
+        batch = 8 if fast else 32
+        qxb = np.broadcast_to(qx, (batch,) + qx.shape).copy()
+        cm.compile_batched(batch)  # exclude bucket compilation from timing
+        us_b, lo, hi = median_time_us(
+            lambda: np.asarray(cm.predict_q(qxb)), iters=iters)
+        lines.append(csv_line(
+            f"runtime/{name}_compiled_batch{batch}_per_req_us",
+            us_b / batch, f"batch call {us_b:.0f}us, ci95=({lo:.0f},{hi:.0f})"))
     return lines
 
 

@@ -12,11 +12,20 @@ The whole graph is translated, ahead of time, into ONE program:
   inputs effectively *owned and dropped* (liveness-based reuse), mirroring
   Sec. 4.1; the byte-exact plan is reported by ``memory.plan_stack``.
 
+Per-op lowering comes from the single-source :mod:`repro.core.registry`; the
+interpreter baseline consumes the same registry, so engine parity is
+structural rather than a convention.
+
 Options:
-  use_pallas  — route quantized FullyConnected through the Pallas MXU kernel
-                (``repro.kernels``), interpret-mode on CPU.
+  use_pallas  — route quantized FullyConnected / DepthwiseConv through the
+                Pallas MXU kernels (``repro.kernels``), interpret-mode on CPU.
   paged       — {op_index: n_pages}: execute those FC layers page-by-page
                 (Sec. 4.3), bounding resident weight bytes.
+
+Batched serving: ``predict``/``predict_q`` accept inputs with one extra
+leading batch dimension. Each batch size is rounded up to a power-of-two
+bucket, AOT-compiled once, and cached, so one ``CompiledModel`` serves
+many concurrent requests without per-size recompilation.
 """
 from __future__ import annotations
 
@@ -27,125 +36,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import graph as G
-from . import ops_ref as K
+from . import registry as R
 from .memory import memory_report
-from .paging import paged_fc_folded
 from .preprocess import preprocess_graph
 
 
 def build_graph_fn(g: G.Graph, folded: dict, use_pallas: bool = False,
-                   paged: Optional[dict] = None):
-    """Returns fn(*graph_dtype_inputs) -> tuple(graph_dtype_outputs)."""
+                   paged: Optional[dict] = None, batched: bool = False):
+    """Returns fn(*graph_dtype_inputs) -> tuple(graph_dtype_outputs).
+
+    With ``batched=True`` every activation (inputs included) carries one
+    extra leading batch dimension and ops run through their registry batch
+    rules.
+    """
     paged = paged or {}
-    if use_pallas:
-        from repro.kernels import ops as pallas_ops
+    run = R.run_batched if batched else R.run_compiled
 
     def fn(*inputs):
-        env = {}
-        for tid, arr in zip(g.inputs, inputs):
-            env[tid] = arr
+        env = dict(zip(g.inputs, inputs))
 
         def val(tid):
             t = g.tensor(tid)
             return jnp.asarray(t.data) if t.is_const else env[tid]
 
         for i, op in enumerate(g.ops):
-            x_t = g.tensor(op.inputs[0])
-            is_q = x_t.dtype == "int8"
-            x = val(op.inputs[0])
-            fused = op.attrs.get("fused", "NONE")
-
-            if op.op == G.FULLY_CONNECTED:
-                w = val(op.inputs[1])
-                if is_q:
-                    fc = folded[i]
-                    if i in paged:
-                        y = paged_fc_folded(x, w, fc, paged[i], fused)
-                    elif use_pallas:
-                        y = pallas_ops.qmatmul_folded(x, w, fc, fused)
-                    else:
-                        y = K.fully_connected_folded(x, w, fc, fused)
-                else:
-                    b = val(op.inputs[2]) if len(op.inputs) > 2 else None
-                    y = K.fully_connected_f(x, w, b, fused)
-            elif op.op in (G.CONV_2D, G.DEPTHWISE_CONV_2D):
-                w = val(op.inputs[1])
-                stride, padding = op.attrs["stride"], op.attrs["padding"]
-                if is_q:
-                    fc = folded[i]
-                    if op.op == G.CONV_2D:
-                        y = K.conv2d_folded(x, w, fc, stride=stride,
-                                            padding=padding, fused=fused)
-                    elif use_pallas:
-                        y = pallas_ops.qdwconv_folded(x, w, fc, stride=stride,
-                                                      padding=padding,
-                                                      fused=fused)
-                    else:
-                        y = K.depthwise_conv2d_folded(x, w, fc, stride=stride,
-                                                      padding=padding,
-                                                      fused=fused)
-                else:
-                    b = val(op.inputs[2]) if len(op.inputs) > 2 else None
-                    f = (K.conv2d_f if op.op == G.CONV_2D
-                         else K.depthwise_conv2d_f)
-                    y = f(x, w, b, stride=stride, padding=padding, fused=fused)
-            elif op.op in (G.AVERAGE_POOL_2D, G.MAX_POOL_2D):
-                kw = dict(window=op.attrs["window"], stride=op.attrs["stride"],
-                          padding=op.attrs["padding"])
-                qf = (K.average_pool2d_q if op.op == G.AVERAGE_POOL_2D
-                      else K.max_pool2d_q)
-                ff = (K.average_pool2d_f if op.op == G.AVERAGE_POOL_2D
-                      else K.max_pool2d_f)
-                if is_q:
-                    qx, qy = x_t.qparams, g.tensor(op.outputs[0]).qparams
-                    y = qf(x, s_x=qx.scale, z_x=qx.zero_point,
-                           s_y=qy.scale, z_y=qy.zero_point, **kw)
-                else:
-                    y = ff(x, **kw)
-            elif op.op == G.ADD:
-                b2 = val(op.inputs[1])
-                if is_q:
-                    qa = x_t.qparams
-                    qb = g.tensor(op.inputs[1]).qparams
-                    qy = g.tensor(op.outputs[0]).qparams
-                    y = K.add_q(x, b2, s_a=qa.scale, z_a=qa.zero_point,
-                                s_b=qb.scale, z_b=qb.zero_point,
-                                s_y=qy.scale, z_y=qy.zero_point, fused=fused)
-                else:
-                    y = K.add_f(x, b2, fused)
-            elif op.op == G.PAD:
-                if is_q:
-                    y = K.pad_q(x, pads=op.attrs["pads"],
-                                z_x=x_t.qparams.zero_point)
-                else:
-                    y = K.pad_f(x, pads=op.attrs["pads"])
-            elif op.op == G.RESHAPE:
-                y = jnp.reshape(x, op.attrs["new_shape"])
-            elif op.op in (G.RELU, G.RELU6, G.SOFTMAX):
-                if is_q:
-                    qx, qy = x_t.qparams, g.tensor(op.outputs[0]).qparams
-                    kw = dict(s_x=qx.scale, z_x=qx.zero_point,
-                              s_y=qy.scale, z_y=qy.zero_point)
-                    if op.op == G.RELU:
-                        y = K.relu_q(x, **kw)
-                    elif op.op == G.RELU6:
-                        y = K.relu6_q(x, **kw)
-                    else:
-                        y = K.softmax_q(x, axis=op.attrs.get("axis", -1), **kw)
-                else:
-                    if op.op == G.RELU:
-                        y = K.relu_f(x)
-                    elif op.op == G.RELU6:
-                        y = K.relu6_f(x)
-                    else:
-                        y = K.softmax_f(x, axis=op.attrs.get("axis", -1))
-            else:
-                raise NotImplementedError(op.op)
-            env[op.outputs[0]] = y
+            ctx = R.OpContext(g, op, i, folded=folded.get(i),
+                              use_pallas=use_pallas, n_pages=paged.get(i))
+            env[op.outputs[0]] = run(ctx, [val(t) for t in op.inputs])
 
         return tuple(env[t] for t in g.outputs)
 
     return fn
+
+
+def _bucket(batch: int) -> int:
+    """Power-of-two shape bucket: one AOT executable serves all batch sizes
+    up to the bucket (inputs are zero-padded, outputs sliced)."""
+    return 1 << max(0, int(batch - 1).bit_length())
 
 
 class CompiledModel:
@@ -155,18 +82,35 @@ class CompiledModel:
                  paged: Optional[dict] = None):
         g.validate()
         self.graph = g
+        self.use_pallas = use_pallas
+        self.paged = paged
         self.folded = preprocess_graph(g)  # compile-time parser phase
         self._fn = jax.jit(build_graph_fn(g, self.folded, use_pallas, paged))
         self._aot = None
+        self._batched_aot = {}  # bucket size -> AOT executable
+
+    def _input_specs(self, lead=()):
+        return [jax.ShapeDtypeStruct(tuple(lead) + self.graph.tensor(t).shape,
+                                     np.dtype(self.graph.tensor(t).dtype))
+                for t in self.graph.inputs]
 
     # -- AOT compilation (Fig. 2's "Target Binary") -----------------------
     def compile(self):
-        specs = [jax.ShapeDtypeStruct(self.graph.tensor(t).shape,
-                                      np.dtype(self.graph.tensor(t).dtype))
-                 for t in self.graph.inputs]
-        lowered = self._fn.lower(*specs)
+        lowered = self._fn.lower(*self._input_specs())
         self._aot = lowered.compile()
         return self._aot
+
+    def compile_batched(self, batch: int):
+        """AOT-compile (and cache) the executable for ``batch``'s bucket."""
+        bucket = _bucket(batch)
+        exe = self._batched_aot.get(bucket)
+        if exe is None:
+            fn = jax.jit(build_graph_fn(self.graph, self.folded,
+                                        self.use_pallas, self.paged,
+                                        batched=True))
+            exe = fn.lower(*self._input_specs(lead=(bucket,))).compile()
+            self._batched_aot[bucket] = exe
+        return exe
 
     @property
     def executable(self):
@@ -178,14 +122,42 @@ class CompiledModel:
         return self.executable.memory_analysis()
 
     def cost_analysis(self):
-        return self.executable.cost_analysis()
+        ca = self.executable.cost_analysis()
+        # JAX < 0.5 returns a one-entry list of dicts; newer JAX the dict.
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return ca
 
     def memory_report(self):
         return memory_report(self.graph)
 
     # -- inference ---------------------------------------------------------
+    def _is_batched(self, first_input) -> bool:
+        t0 = self.graph.tensor(self.graph.inputs[0])
+        return np.ndim(first_input) == len(t0.shape) + 1
+
+    def _predict_q_batched(self, inputs):
+        batch = np.asarray(inputs[0]).shape[0]
+        bucket = _bucket(batch)
+        args = []
+        for tid, arr in zip(self.graph.inputs, inputs):
+            t = self.graph.tensor(tid)
+            a = np.asarray(arr, t.dtype).reshape((-1,) + t.shape)
+            assert a.shape[0] == batch, (
+                f"all inputs must share the batch dim: {a.shape[0]} != {batch}")
+            if bucket != batch:
+                a = np.concatenate(
+                    [a, np.zeros((bucket - batch,) + t.shape, t.dtype)])
+            args.append(jnp.asarray(a))
+        outs = self.compile_batched(batch)(*args)
+        outs = tuple(np.asarray(o)[:batch] for o in outs)
+        return outs if len(outs) > 1 else outs[0]
+
     def predict_q(self, *inputs):
-        """Graph-dtype in / graph-dtype out."""
+        """Graph-dtype in / graph-dtype out. Inputs may carry one extra
+        leading batch dimension (routed through the bucketed batch path)."""
+        if self._is_batched(inputs[0]):
+            return self._predict_q_batched(inputs)
         args = []
         for tid, arr in zip(self.graph.inputs, inputs):
             t = self.graph.tensor(tid)
@@ -194,11 +166,15 @@ class CompiledModel:
         return outs if len(outs) > 1 else outs[0]
 
     def predict(self, *inputs):
-        """Float in / float out (TFLite-style interface)."""
+        """Float in / float out (TFLite-style interface). Accepts either
+        exact graph-shaped inputs or a leading batch dimension on every
+        input; batched results are row-identical to batch-1 calls."""
+        batched = self._is_batched(inputs[0])
         qin = []
         for tid, arr in zip(self.graph.inputs, inputs):
             t = self.graph.tensor(tid)
-            arr = np.asarray(arr, np.float32).reshape(t.shape)
+            shape = ((-1,) + t.shape) if batched else t.shape
+            arr = np.asarray(arr, np.float32).reshape(shape)
             qin.append(t.qparams.quantize(arr) if t.dtype == "int8" else arr)
         outs = self.predict_q(*qin)
         if not isinstance(outs, tuple):

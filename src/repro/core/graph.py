@@ -173,6 +173,10 @@ class Graph:
         for t in self.inputs + self.outputs:
             assert 0 <= t < n
         for op in self.ops:
+            assert len(op.outputs) == 1, (
+                f"{op.op}: multi-output ops are unsupported — the engines "
+                f"store exactly one result per op (got {len(op.outputs)} "
+                f"outputs)")
             for t in op.inputs:
                 assert 0 <= t < n, (op.op, t)
                 if not self.tensors[t].is_const:

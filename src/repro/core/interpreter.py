@@ -1,9 +1,11 @@
 """Interpreter-based engine — the TFLM-architecture baseline (Sec. 3.3, 4.2).
 
 Faithful to the paper's description of interpreter-based inference:
-* the model graph is walked *at run time*, op by op, with dynamic dispatch;
+* the model graph is walked *at run time*, op by op, with dynamic dispatch
+  through the single-source op registry (``repro.core.registry``) — the same
+  registry the compiled engine lowers from, so the two engines cannot drift;
 * every constant term of the quantized formulas (Eqs. 3/6/9/12) is computed
-  at run time, nothing is folded;
+  at run time, nothing is folded (the registry's ``eval_reference`` path);
 * activations live in a pre-sized tensor **arena** that persists for the whole
   inference (``repro.core.memory.plan_arena``).
 
@@ -14,13 +16,8 @@ from __future__ import annotations
 import numpy as np
 
 from . import graph as G
-from . import ops_ref as K
+from . import registry as R
 from .memory import plan_arena
-
-
-def _qp(t: G.TensorSpec):
-    qp = t.qparams
-    return np.asarray(qp.scale), np.asarray(qp.zero_point)
 
 
 class Interpreter:
@@ -49,102 +46,9 @@ class Interpreter:
             return t.data
         return env[tid]
 
-    def _dispatch(self, op: G.OpNode, env: dict) -> np.ndarray:
-        g = self.g
-        x_t = g.tensor(op.inputs[0])
-        is_q = x_t.dtype == "int8"
-        x = self._value(op.inputs[0], env)
-        y_t = g.tensor(op.outputs[0])
-
-        if op.op == G.FULLY_CONNECTED or op.op in (G.CONV_2D,
-                                                   G.DEPTHWISE_CONV_2D):
-            w_t = g.tensor(op.inputs[1])
-            w = w_t.data
-            b_t = g.tensor(op.inputs[2]) if len(op.inputs) > 2 else None
-            b = b_t.data if b_t is not None else None
-            fused = op.attrs.get("fused", "NONE")
-            if is_q:
-                s_x, z_x = _qp(x_t)
-                s_w, z_w = _qp(w_t)
-                s_y, z_y = _qp(y_t)
-                if b_t is not None:
-                    s_b, z_b = _qp(b_t)
-                else:
-                    s_b, z_b = np.float32(1.0), np.int32(0)
-                common = dict(s_x=s_x, z_x=z_x, s_b=s_b, z_b=z_b,
-                              s_y=s_y, z_y=z_y, fused=fused)
-                if op.op == G.FULLY_CONNECTED:
-                    return K.fully_connected_q(x, w, b, s_w=s_w, z_w=z_w,
-                                               **common)
-                stride = op.attrs["stride"]
-                padding = op.attrs["padding"]
-                if op.op == G.CONV_2D:
-                    return K.conv2d_q(x, w, b, stride=stride, padding=padding,
-                                      s_f=s_w, z_f=z_w, **common)
-                return K.depthwise_conv2d_q(x, w, b, stride=stride,
-                                            padding=padding, s_w=s_w, z_w=z_w,
-                                            **common)
-            if op.op == G.FULLY_CONNECTED:
-                return K.fully_connected_f(x, w, b, fused)
-            stride = op.attrs["stride"]
-            padding = op.attrs["padding"]
-            if op.op == G.CONV_2D:
-                return K.conv2d_f(x, w, b, stride=stride, padding=padding,
-                                  fused=fused)
-            return K.depthwise_conv2d_f(x, w, b, stride=stride,
-                                        padding=padding, fused=fused)
-
-        if op.op in (G.AVERAGE_POOL_2D, G.MAX_POOL_2D):
-            kw = dict(window=op.attrs["window"], stride=op.attrs["stride"],
-                      padding=op.attrs["padding"])
-            qf = (K.average_pool2d_q if op.op == G.AVERAGE_POOL_2D
-                  else K.max_pool2d_q)
-            ff = (K.average_pool2d_f if op.op == G.AVERAGE_POOL_2D
-                  else K.max_pool2d_f)
-            if is_q:
-                s_x, z_x = _qp(x_t)
-                s_y, z_y = _qp(y_t)
-                return qf(x, s_x=s_x, z_x=z_x, s_y=s_y, z_y=z_y, **kw)
-            return ff(x, **kw)
-
-        if op.op == G.ADD:
-            b_t2 = g.tensor(op.inputs[1])
-            b_val = self._value(op.inputs[1], env)
-            fused = op.attrs.get("fused", "NONE")
-            if is_q:
-                s_a, z_a = _qp(x_t)
-                s_b, z_b = _qp(b_t2)
-                s_y, z_y = _qp(y_t)
-                return K.add_q(x, b_val, s_a=s_a, z_a=z_a, s_b=s_b, z_b=z_b,
-                               s_y=s_y, z_y=z_y, fused=fused)
-            return K.add_f(x, b_val, fused)
-
-        if op.op == G.PAD:
-            if is_q:
-                _, z_x = _qp(x_t)
-                return K.pad_q(x, pads=op.attrs["pads"], z_x=z_x)
-            return K.pad_f(x, pads=op.attrs["pads"])
-
-        if op.op == G.RESHAPE:
-            return np.asarray(x).reshape(op.attrs["new_shape"])
-
-        if op.op in (G.RELU, G.RELU6, G.SOFTMAX):
-            if is_q:
-                s_x, z_x = _qp(x_t)
-                s_y, z_y = _qp(y_t)
-                if op.op == G.RELU:
-                    return K.relu_q(x, s_x=s_x, z_x=z_x, s_y=s_y, z_y=z_y)
-                if op.op == G.RELU6:
-                    return K.relu6_q(x, s_x=s_x, z_x=z_x, s_y=s_y, z_y=z_y)
-                return K.softmax_q(x, s_x=s_x, z_x=z_x, s_y=s_y, z_y=z_y,
-                                   axis=op.attrs.get("axis", -1))
-            if op.op == G.RELU:
-                return K.relu_f(x)
-            if op.op == G.RELU6:
-                return K.relu6_f(x)
-            return K.softmax_f(x, axis=op.attrs.get("axis", -1))
-
-        raise NotImplementedError(op.op)
+    def _dispatch(self, op: G.OpNode, env: dict, index: int = 0) -> np.ndarray:
+        ctx = R.OpContext(self.g, op, index)
+        return R.run_reference(ctx, [self._value(t, env) for t in op.inputs])
 
     def invoke_env(self, *inputs) -> dict:
         """Run with raw (already graph-dtype) inputs; return the full
@@ -156,8 +60,8 @@ class Interpreter:
             buf = self._buffer(tid)
             np.copyto(buf, arr)
             env[tid] = buf
-        for op in self.g.ops:
-            out = np.asarray(self._dispatch(op, env))
+        for i, op in enumerate(self.g.ops):
+            out = np.asarray(self._dispatch(op, env, i))
             buf = self._buffer(op.outputs[0])
             np.copyto(buf, out)
             env[op.outputs[0]] = buf

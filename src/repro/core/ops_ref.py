@@ -296,12 +296,13 @@ def depthwise_conv2d_f(x, w, b, *, stride, padding, fused: str = "NONE"):
 
 def _pool_sum_and_count(x32, window, stride, padding):
     wh, ww = window
+    zero = jnp.zeros((), x32.dtype)  # init must match the operand dtype
     sums = jax.lax.reduce_window(
-        x32, jnp.int32(0), jax.lax.add, (1, wh, ww, 1), (1,) + tuple(stride) + (1,),
+        x32, zero, jax.lax.add, (1, wh, ww, 1), (1,) + tuple(stride) + (1,),
         padding)
-    ones = jnp.ones(x32.shape[:3] + (1,), jnp.int32)
+    ones = jnp.ones(x32.shape[:3] + (1,), x32.dtype)
     counts = jax.lax.reduce_window(
-        ones, jnp.int32(0), jax.lax.add, (1, wh, ww, 1), (1,) + tuple(stride) + (1,),
+        ones, zero, jax.lax.add, (1, wh, ww, 1), (1,) + tuple(stride) + (1,),
         padding)
     return sums, counts
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from . import graph as G
+from . import registry
 from .ops_ref import FoldedConsts
 
 
@@ -28,21 +29,15 @@ def fold_weighted_op(g: G.Graph, op: G.OpNode) -> FoldedConsts:
     s_w, z_w = _scalar_or_channel(w_t.qparams)
     s_y, z_y = _scalar_or_channel(y_t.qparams)
 
+    # ΣW (Eq. 4/7/10, third term) and the n·z_X·z_W count come from the
+    # registry's per-op weight-reduction spec — FC sums the contraction dim,
+    # convs the kh/kw/cin taps, depthwise the kh/kw taps per channel.
+    desc = registry.get(op.op)
+    if desc.w_sum_axes is None:
+        raise ValueError(f"{op.op} has no folded form")
     w = w_t.data.astype(np.int64)
-    if op.op == G.FULLY_CONNECTED:
-        # w: (n, p) — sum over the contraction dim k (Eq. 4, third term)
-        sum_w = w.sum(axis=0)
-        count = w.shape[0]
-    elif op.op == G.CONV_2D:
-        # w: (kh, kw, cin, cout) — Eq. (7), third term
-        sum_w = w.sum(axis=(0, 1, 2))
-        count = int(np.prod(w.shape[:3]))
-    elif op.op == G.DEPTHWISE_CONV_2D:
-        # w: (kh, kw, c, 1) — Eq. (10), third term
-        sum_w = w.sum(axis=(0, 1, 3))
-        count = int(np.prod(w.shape[:2]))
-    else:
-        raise ValueError(op.op)
+    sum_w = w.sum(axis=desc.w_sum_axes)
+    count = int(np.prod([w.shape[a] for a in desc.w_count_axes]))
 
     if b_t is not None:
         s_b, z_b = _scalar_or_channel(b_t.qparams)
@@ -70,7 +65,7 @@ def preprocess_graph(g: G.Graph) -> dict:
     """op index -> FoldedConsts, for every quantized weighted op."""
     folded = {}
     for i, op in enumerate(g.ops):
-        if op.op in (G.FULLY_CONNECTED, G.CONV_2D, G.DEPTHWISE_CONV_2D):
+        if registry.get(op.op).w_sum_axes is not None:
             if g.tensor(op.inputs[0]).dtype == "int8":
                 folded[i] = fold_weighted_op(g, op)
     return folded

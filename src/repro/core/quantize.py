@@ -10,6 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from . import graph as G
+from . import registry
 
 QMIN, QMAX = -128, 127
 
@@ -32,22 +33,18 @@ def _weight_qparams_per_channel(w: np.ndarray, axis: int) -> G.QParams:
     return G.QParams(scale, zp, axis=axis)
 
 
-_W_AXIS = {G.FULLY_CONNECTED: 1, G.CONV_2D: 3, G.DEPTHWISE_CONV_2D: 2}
-
-
 def calibrate(g: G.Graph, representative_inputs) -> dict:
     """Run the float graph over representative data, track min/max per
-    activation tensor. Returns tensor id -> (min, max)."""
-    from .interpreter import Interpreter
+    activation tensor. Returns tensor id -> (min, max).
 
-    # No arena: calibration inspects EVERY intermediate tensor, so buffers
-    # must not be liveness-reused (the arena aliases dead tensors' memory).
-    interp = Interpreter(g, use_arena=False)
+    Uses the registry's reference executor with a plain dict environment:
+    every intermediate tensor stays live and pristine (an arena would alias
+    dead tensors' memory and corrupt the ranges)."""
     ranges = {}
     for batch in representative_inputs:
         if not isinstance(batch, (tuple, list)):
             batch = (batch,)
-        env = interp.invoke_env(*batch)
+        env = registry.run_graph_reference(g, batch)
         for tid, arr in env.items():
             lo, hi = float(np.min(arr)), float(np.max(arr))
             if tid in ranges:
@@ -62,7 +59,6 @@ def quantize_graph(g: G.Graph, representative_inputs) -> G.Graph:
     """Float graph -> int8 graph with the same topology."""
     ranges = calibrate(g, representative_inputs)
 
-    tensors = []
     # Which op produces each tensor (to special-case Softmax outputs).
     producer = {}
     for op in g.ops:
@@ -73,10 +69,11 @@ def quantize_graph(g: G.Graph, representative_inputs) -> G.Graph:
     # and activations from calibration ranges.
     new_tensors = [None] * len(g.tensors)
     for op in g.ops:
-        if op.op in _W_AXIS:
+        w_axis = registry.weight_axis(op.op)
+        if w_axis is not None:
             w_id = op.inputs[1]
             w_t = g.tensor(w_id)
-            qp_w = _weight_qparams_per_channel(w_t.data, _W_AXIS[op.op])
+            qp_w = _weight_qparams_per_channel(w_t.data, w_axis)
             new_tensors[w_id] = G.TensorSpec(
                 w_t.name, w_t.shape, "int8", qp_w, qp_w.quantize(w_t.data))
 
@@ -96,7 +93,7 @@ def quantize_graph(g: G.Graph, representative_inputs) -> G.Graph:
 
     # Second pass: biases (need s_x and s_w of their op).
     for op in g.ops:
-        if op.op in _W_AXIS and len(op.inputs) > 2:
+        if registry.weight_axis(op.op) is not None and len(op.inputs) > 2:
             b_id = op.inputs[2]
             b_t = g.tensor(b_id)
             s_x = new_tensors[op.inputs[0]].qparams.scale

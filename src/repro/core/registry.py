@@ -1,0 +1,428 @@
+"""Single-source operator registry — every lowering of every op in one place.
+
+The paper's central claim (Table 5) is that the compiler-based engine
+(MicroFlow, ``repro.core.engine``) and the interpreter-based baseline
+(TFLM-style, ``repro.core.interpreter``) compute the *same* quantized
+function, differing only in **when** work happens. Keeping the per-op
+dispatch duplicated across the two engines made that equivalence a
+convention instead of a property; this registry makes it structural.
+
+Each operator registers exactly one :class:`OpDescriptor` holding:
+
+``eval_reference``
+    The interpreter/TFLM path: quantization parameters extracted at call
+    time, every constant term of Eqs. (3)/(6)/(9)/(12) computed at run time.
+``lower_compiled``
+    The MicroFlow path: the compile-time :class:`FoldedConsts` produced by
+    ``preprocess.fold_weighted_op`` are consumed, so only input-dependent
+    terms remain. Ops with nothing to fold leave this ``None`` and both
+    engines share ``eval_reference`` — one implementation, two schedules.
+``lower_pallas`` / ``lower_paged``
+    Optional MXU-kernel and paged (Sec. 4.3) routes for the compiled engine.
+``batched``
+    How the op executes with an extra leading batch dimension ``B`` on every
+    activation (weights/consts are never batched). FC merges ``B`` into its
+    row dimension; convs/pools merge it into the native NHWC batch; shape
+    ops rewrite their attributes; elementwise ops need no rule at all.
+``weight_axis`` / ``w_sum_axes`` / ``w_count_axes``
+    Quantization metadata for weighted ops: the per-channel axis used by
+    PTQ (``quantize``) and the ΣW reduction spec used by compile-time
+    folding (``preprocess``) — previously two more hand-kept tables.
+
+Executors: :func:`run_reference`, :func:`run_compiled`, :func:`run_batched`,
+plus :func:`run_graph_reference` (the env-walk used by calibration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import graph as G
+from . import ops_ref as K
+from .paging import paged_fc_folded
+
+
+# ---------------------------------------------------------------------------
+# Shared qparam extraction — the ONLY place quantized scales/zero-points are
+# pulled out of tensor specs for dispatch.
+# ---------------------------------------------------------------------------
+
+def qparams(t: G.TensorSpec):
+    """(scale, zero_point) of a tensor, as numpy arrays."""
+    qp = t.qparams
+    return np.asarray(qp.scale), np.asarray(qp.zero_point)
+
+
+def io_qparams(ctx: "OpContext"):
+    """Input/output activation qparams as the s_x/z_x/s_y/z_y kwarg dict
+    shared by the pool/activation kernels."""
+    s_x, z_x = qparams(ctx.t_in(0))
+    s_y, z_y = qparams(ctx.t_out())
+    return dict(s_x=s_x, z_x=z_x, s_y=s_y, z_y=z_y)
+
+
+def weighted_qparams(ctx: "OpContext", b):
+    """Runtime qparams for a weighted op (FC/conv/depthwise): the common
+    activation+bias kwargs plus the weight (scale, zero_point) pair, with
+    the TFLite bias defaults (s_b=1, z_b=0) when the op has no bias."""
+    common = io_qparams(ctx)
+    s_w, z_w = qparams(ctx.t_in(1))
+    if b is not None:
+        s_b, z_b = qparams(ctx.t_in(2))
+    else:
+        s_b, z_b = np.float32(1.0), np.int32(0)
+    common.update(s_b=s_b, z_b=z_b)
+    return common, s_w, z_w
+
+
+@dataclasses.dataclass(frozen=True)
+class OpContext:
+    """Everything a lowering needs about one op instance.
+
+    ``folded``/``use_pallas``/``n_pages`` are compiled-engine routing state;
+    the reference path ignores them.
+    """
+
+    g: G.Graph
+    op: G.OpNode
+    index: int = 0
+    folded: Optional[K.FoldedConsts] = None
+    use_pallas: bool = False
+    n_pages: Optional[int] = None
+
+    def t_in(self, j: int) -> G.TensorSpec:
+        return self.g.tensor(self.op.inputs[j])
+
+    def t_out(self, j: int = 0) -> G.TensorSpec:
+        return self.g.tensor(self.op.outputs[j])
+
+    @property
+    def is_q(self) -> bool:
+        return self.t_in(0).dtype == "int8"
+
+    @property
+    def fused(self) -> str:
+        return self.op.attrs.get("fused", "NONE")
+
+
+def _with_attrs(ctx: OpContext, **updates) -> OpContext:
+    """Context whose op carries rewritten attrs (batched shape-op rules)."""
+    op = ctx.op
+    new_op = G.OpNode(op.op, op.inputs, op.outputs, {**op.attrs, **updates})
+    return dataclasses.replace(ctx, op=new_op)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpDescriptor:
+    name: str
+    eval_reference: Callable
+    lower_compiled: Optional[Callable] = None
+    lower_pallas: Optional[Callable] = None
+    lower_paged: Optional[Callable] = None
+    batched: Optional[Callable] = None
+    weight_axis: Optional[int] = None   # per-channel PTQ axis of inputs[1]
+    w_sum_axes: Optional[tuple] = None  # ΣW reduction axes (Eq. 4/7/10)
+    w_count_axes: Optional[tuple] = None  # axes whose sizes multiply to n·z_X·z_W's n
+
+
+_REGISTRY: dict = {}
+
+
+def register(name: str, **fields) -> None:
+    assert name in G.ALL_OPS, name
+    _REGISTRY[name] = OpDescriptor(name=name, **fields)
+
+
+def get(name: str) -> OpDescriptor:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise NotImplementedError(f"op {name!r} is not registered") from None
+
+
+def registered_ops() -> tuple:
+    return tuple(_REGISTRY)
+
+
+def weight_axis(name: str) -> Optional[int]:
+    d = _REGISTRY.get(name)
+    return None if d is None else d.weight_axis
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+
+def run_reference(ctx: OpContext, vals) -> "np.ndarray":
+    """Interpreter/TFLM path: runtime qparams, nothing folded."""
+    return get(ctx.op.op).eval_reference(ctx, *vals)
+
+
+def run_compiled(ctx: OpContext, vals):
+    """Compiled/MicroFlow path with paged > pallas > plain route priority
+    (paging bounds resident bytes, so it wins when both are requested)."""
+    d = get(ctx.op.op)
+    if ctx.is_q and ctx.folded is not None:
+        if ctx.n_pages and d.lower_paged is not None:
+            return d.lower_paged(ctx, *vals)
+        if ctx.use_pallas and d.lower_pallas is not None:
+            return d.lower_pallas(ctx, *vals)
+    fn = d.lower_compiled or d.eval_reference
+    return fn(ctx, *vals)
+
+
+def run_batched(ctx: OpContext, vals):
+    """Compiled path with a leading batch dim on every activation value."""
+    d = get(ctx.op.op)
+    if d.batched is not None:
+        return d.batched(ctx, *vals)
+    return run_compiled(ctx, vals)  # elementwise: batch dim broadcasts
+
+
+def run_graph_reference(g: G.Graph, inputs) -> dict:
+    """Walk a graph through the reference lowerings with a plain dict env —
+    every intermediate stays live (what calibration needs). Returns
+    tensor id -> np.ndarray for inputs and all op outputs."""
+    env = {}
+    for tid, arr in zip(g.inputs, inputs):
+        t = g.tensor(tid)
+        env[tid] = np.asarray(arr, t.dtype).reshape(t.shape)
+
+    def val(tid):
+        t = g.tensor(tid)
+        return t.data if t.is_const else env[tid]
+
+    for i, op in enumerate(g.ops):
+        ctx = OpContext(g, op, i)
+        out = run_reference(ctx, [val(t) for t in op.inputs])
+        env[op.outputs[0]] = np.asarray(out)
+    return env
+
+
+# ---------------------------------------------------------------------------
+# Batched helpers
+# ---------------------------------------------------------------------------
+
+def _merge_lead2(ctx: OpContext, x, *rest):
+    """Fold the batch dim into the op's own leading dim — FC rows, or the
+    native NHWC batch of convs/pools — run the normal compiled route, and
+    split back. Exact: both ops are parallel over that dimension."""
+    b, d0 = x.shape[0], x.shape[1]
+    y = run_compiled(ctx, (x.reshape((b * d0,) + x.shape[2:]),) + rest)
+    return y.reshape((b, d0) + y.shape[1:])
+
+
+def _pad_batched(ctx: OpContext, x):
+    pads = ((0, 0),) + tuple(ctx.op.attrs["pads"])
+    return run_compiled(_with_attrs(ctx, pads=pads), [x])
+
+
+def _reshape_batched(ctx: OpContext, x):
+    shape = (x.shape[0],) + tuple(ctx.op.attrs["new_shape"])
+    return run_compiled(_with_attrs(ctx, new_shape=shape), [x])
+
+
+def _softmax_batched(ctx: OpContext, x):
+    axis = ctx.op.attrs.get("axis", -1)
+    if axis >= 0:
+        ctx = _with_attrs(ctx, axis=axis + 1)
+    return run_compiled(ctx, [x])
+
+
+# ---------------------------------------------------------------------------
+# FULLY_CONNECTED — Eqs. (2)-(4)
+# ---------------------------------------------------------------------------
+
+def _fc_reference(ctx, x, w, b=None):
+    if not ctx.is_q:
+        return K.fully_connected_f(x, w, b, ctx.fused)
+    common, s_w, z_w = weighted_qparams(ctx, b)
+    return K.fully_connected_q(x, w, b, s_w=s_w, z_w=z_w, fused=ctx.fused,
+                               **common)
+
+
+def _fc_compiled(ctx, x, w, b=None):
+    if not ctx.is_q:
+        return K.fully_connected_f(x, w, b, ctx.fused)
+    return K.fully_connected_folded(x, w, ctx.folded, ctx.fused)
+
+
+def _fc_pallas(ctx, x, w, b=None):
+    from repro.kernels import ops as pallas_ops
+    return pallas_ops.qmatmul_folded(x, w, ctx.folded, ctx.fused)
+
+
+def _fc_paged(ctx, x, w, b=None):
+    return paged_fc_folded(x, w, ctx.folded, ctx.n_pages, ctx.fused)
+
+
+register(
+    G.FULLY_CONNECTED,
+    eval_reference=_fc_reference,
+    lower_compiled=_fc_compiled,
+    lower_pallas=_fc_pallas,
+    lower_paged=_fc_paged,
+    batched=_merge_lead2,
+    weight_axis=1,
+    w_sum_axes=(0,),
+    w_count_axes=(0,),
+)
+
+
+# ---------------------------------------------------------------------------
+# CONV_2D / DEPTHWISE_CONV_2D — Eqs. (5)-(10)
+# ---------------------------------------------------------------------------
+
+def _conv_geometry(ctx):
+    return dict(stride=ctx.op.attrs["stride"], padding=ctx.op.attrs["padding"])
+
+
+def _conv_reference(ctx, x, f, b=None):
+    kw = _conv_geometry(ctx)
+    if not ctx.is_q:
+        return K.conv2d_f(x, f, b, fused=ctx.fused, **kw)
+    common, s_f, z_f = weighted_qparams(ctx, b)
+    return K.conv2d_q(x, f, b, s_f=s_f, z_f=z_f, fused=ctx.fused,
+                      **common, **kw)
+
+
+def _conv_compiled(ctx, x, f, b=None):
+    kw = _conv_geometry(ctx)
+    if not ctx.is_q:
+        return K.conv2d_f(x, f, b, fused=ctx.fused, **kw)
+    return K.conv2d_folded(x, f, ctx.folded, fused=ctx.fused, **kw)
+
+
+register(
+    G.CONV_2D,
+    eval_reference=_conv_reference,
+    lower_compiled=_conv_compiled,
+    batched=_merge_lead2,
+    weight_axis=3,
+    w_sum_axes=(0, 1, 2),
+    w_count_axes=(0, 1, 2),
+)
+
+
+def _dwconv_reference(ctx, x, w, b=None):
+    kw = _conv_geometry(ctx)
+    if not ctx.is_q:
+        return K.depthwise_conv2d_f(x, w, b, fused=ctx.fused, **kw)
+    common, s_w, z_w = weighted_qparams(ctx, b)
+    return K.depthwise_conv2d_q(x, w, b, s_w=s_w, z_w=z_w, fused=ctx.fused,
+                                **common, **kw)
+
+
+def _dwconv_compiled(ctx, x, w, b=None):
+    kw = _conv_geometry(ctx)
+    if not ctx.is_q:
+        return K.depthwise_conv2d_f(x, w, b, fused=ctx.fused, **kw)
+    return K.depthwise_conv2d_folded(x, w, ctx.folded, fused=ctx.fused, **kw)
+
+
+def _dwconv_pallas(ctx, x, w, b=None):
+    from repro.kernels import ops as pallas_ops
+    return pallas_ops.qdwconv_folded(x, w, ctx.folded, fused=ctx.fused,
+                                     **_conv_geometry(ctx))
+
+
+register(
+    G.DEPTHWISE_CONV_2D,
+    eval_reference=_dwconv_reference,
+    lower_compiled=_dwconv_compiled,
+    lower_pallas=_dwconv_pallas,
+    batched=_merge_lead2,
+    weight_axis=2,
+    w_sum_axes=(0, 1, 3),
+    w_count_axes=(0, 1),
+)
+
+
+# ---------------------------------------------------------------------------
+# Pools — Eq. (12) and the max-commutes-with-affine argument
+# ---------------------------------------------------------------------------
+
+def _make_pool(qf, ff):
+    def impl(ctx, x):
+        kw = dict(window=ctx.op.attrs["window"], stride=ctx.op.attrs["stride"],
+                  padding=ctx.op.attrs["padding"])
+        if ctx.is_q:
+            return qf(x, **io_qparams(ctx), **kw)
+        return ff(x, **kw)
+    return impl
+
+
+register(G.AVERAGE_POOL_2D,
+         eval_reference=_make_pool(K.average_pool2d_q, K.average_pool2d_f),
+         batched=_merge_lead2)
+register(G.MAX_POOL_2D,
+         eval_reference=_make_pool(K.max_pool2d_q, K.max_pool2d_f),
+         batched=_merge_lead2)
+
+
+# ---------------------------------------------------------------------------
+# ADD / PAD / RESHAPE — elementwise and shape ops
+# ---------------------------------------------------------------------------
+
+def _add_eval(ctx, a, b):
+    if not ctx.is_q:
+        return K.add_f(a, b, ctx.fused)
+    s_a, z_a = qparams(ctx.t_in(0))
+    s_b, z_b = qparams(ctx.t_in(1))
+    s_y, z_y = qparams(ctx.t_out())
+    return K.add_q(a, b, s_a=s_a, z_a=z_a, s_b=s_b, z_b=z_b,
+                   s_y=s_y, z_y=z_y, fused=ctx.fused)
+
+
+register(G.ADD, eval_reference=_add_eval)  # elementwise: default batch rule
+
+
+def _pad_eval(ctx, x):
+    pads = ctx.op.attrs["pads"]
+    if ctx.is_q:
+        _, z_x = qparams(ctx.t_in(0))
+        return K.pad_q(x, pads=pads, z_x=z_x)
+    return K.pad_f(x, pads=pads)
+
+
+register(G.PAD, eval_reference=_pad_eval, batched=_pad_batched)
+
+
+def _reshape_eval(ctx, x):
+    return jnp.reshape(x, ctx.op.attrs["new_shape"])
+
+
+register(G.RESHAPE, eval_reference=_reshape_eval, batched=_reshape_batched)
+
+
+# ---------------------------------------------------------------------------
+# Standalone activations — Eqs. (14), (16), (18)
+# ---------------------------------------------------------------------------
+
+def _make_act(qf, ff):
+    def impl(ctx, x):
+        if ctx.is_q:
+            return qf(x, **io_qparams(ctx))
+        return ff(x)
+    return impl
+
+
+register(G.RELU, eval_reference=_make_act(K.relu_q, K.relu_f))
+register(G.RELU6, eval_reference=_make_act(K.relu6_q, K.relu6_f))
+
+
+def _softmax_eval(ctx, x):
+    axis = ctx.op.attrs.get("axis", -1)
+    if ctx.is_q:
+        return K.softmax_q(x, axis=axis, **io_qparams(ctx))
+    return K.softmax_f(x, axis=axis)
+
+
+register(G.SOFTMAX, eval_reference=_softmax_eval, batched=_softmax_batched)
+
+
+assert set(registered_ops()) == set(G.ALL_OPS), (
+    "registry must cover the full operator vocabulary")

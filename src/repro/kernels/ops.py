@@ -61,7 +61,12 @@ def qmatmul_folded(x_q, w_q, fc: FoldedConsts, fused: str = "NONE",
                    *, paged: bool = False, page: int = LANE):
     """Engine entry point: folded Eq. (3) on the MXU-tiled Pallas kernel.
     Pads (M, K, N) to 128 multiples with zeros — zero K-padding contributes
-    nothing to either Σ X W or Σ X, so the result is exact after slicing."""
+    nothing to either Σ X W or Σ X, so the result is exact after slicing.
+    Accepts any leading x rank (rows are independent): (..., K) @ (K, N)
+    collapses the leading dims through the 2-D kernel and restores them."""
+    lead = x_q.shape[:-1]
+    if x_q.ndim != 2:
+        x_q = x_q.reshape((-1, x_q.shape[-1]))
     m, k = x_q.shape
     _, n = w_q.shape
     lo, hi = _bounds(fc, fused)
@@ -74,7 +79,7 @@ def qmatmul_folded(x_q, w_q, fc: FoldedConsts, fused: str = "NONE",
     else:
         out = _qm.qmatmul(xp, wp, *consts, lo=lo, hi=hi,
                           interpret=_interpret())
-    return out[:m, :n]
+    return out[:m, :n].reshape(lead + (n,))
 
 
 def fmatmul(x, w):

@@ -27,6 +27,22 @@ from jax.sharding import PartitionSpec as P
 from .layers import apply_mlp
 
 
+def _shard_map_model_axis(f, mesh, in_specs, out_specs, axis):
+    """shard_map collecting over ONLY ``axis``, across JAX versions: new JAX
+    manualizes just that axis (``axis_names={axis}, check_vma=False``) and
+    leaves the rest to GSPMD. JAX < 0.6's partial-auto mode trips an XLA
+    manual-subgroup check, so there we manualize every axis — equivalent
+    here because the body only ever names ``axis`` in collectives and no
+    spec mentions the other axes (they stay replicated either way)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names={axis},
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def _rank_in_bins(ids, n_bins, capacity):
     """Stable-sort ids into bins, rank within bin, drop beyond capacity.
     Returns (order, bin_idx, rank_idx) where dropped entries map to the
@@ -115,11 +131,10 @@ def moe_all_to_all(cfg, p, x, mesh, axis="model"):
         aux = E * jnp.sum(frac_tokens * jnp.mean(probs, axis=0)) / k
         return y, jax.lax.pmean(aux, axis)
 
-    fn = jax.shard_map(
-        local, mesh=mesh,
+    fn = _shard_map_model_axis(
+        local, mesh,
         in_specs=(P(axis), P(), P(axis), P(axis), P(axis)),
-        out_specs=(P(axis), P()),
-        axis_names={axis}, check_vma=False)
+        out_specs=(P(axis), P()), axis=axis)
     y, aux = fn(x.reshape(n, d), p["router"], p["w_gate"], p["w_up"],
                 p["w_down"])
     if cfg.n_shared_experts:

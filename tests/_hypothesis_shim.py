@@ -1,0 +1,149 @@
+"""Minimal, deterministic stand-in for ``hypothesis``.
+
+This repo's property tests only need ``given``, ``settings`` profiles, and
+the ``integers`` / ``booleans`` / ``sampled_from`` / ``floats`` / ``lists``
+strategies. When the real ``hypothesis`` package is unavailable (the tier-1
+environment is offline), ``tests/conftest.py`` loads this module into
+``sys.modules['hypothesis']`` so every test module collects and runs.
+
+Semantics: ``@given(**strategies)`` runs the test body ``max_examples``
+times (from the loaded settings profile) with values drawn from a PRNG
+seeded by the test's qualified name — deterministic across runs and
+processes, no shrinking, no example database.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw, label=""):
+        self._draw = draw
+        self._label = label
+
+    def __repr__(self):
+        return f"shim-strategy({self._label})"
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=2**63 - 1):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)),
+                     f"integers({min_value}, {max_value})")
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)), "booleans")
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                     f"sampled_from({len(elements)} elements)")
+
+
+def floats(min_value=-1e9, max_value=1e9, **_):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)),
+                     f"floats({min_value}, {max_value})")
+
+
+def lists(elements, min_size=0, max_size=10, **_):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw, f"lists(..., {min_size}..{max_size})")
+
+
+def just(value):
+    return _Strategy(lambda rng: value, f"just({value!r})")
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies),
+                     f"tuples({len(strategies)})")
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "booleans", "sampled_from", "floats", "lists",
+              "just", "tuples"):
+    setattr(strategies, _name, globals()[_name])
+
+
+class settings:
+    """Profile registry compatible with settings.register_profile /
+    load_profile; also usable as a per-test decorator."""
+
+    _profiles = {"default": {"max_examples": 10}}
+    _current = {"max_examples": 10}
+
+    def __init__(self, **kwargs):
+        self.kwargs = kwargs
+
+    def __call__(self, fn):
+        fn._shim_settings = self.kwargs
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = dict(kwargs)
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = dict(cls._profiles[name])
+
+
+class HealthCheck:
+    # accepted (and ignored) in suppress_health_check lists
+    too_slow = data_too_large = filter_too_much = all = None
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Rejected()
+    return True
+
+
+class _Rejected(Exception):
+    pass
+
+
+def given(*arg_strategies, **kw_strategies):
+    assert not arg_strategies, (
+        "the hypothesis shim supports keyword strategies only")
+
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            overrides = getattr(wrapper, "_shim_settings", {})
+            n = overrides.get("max_examples",
+                              settings._current.get("max_examples", 10))
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            ran = 0
+            for _ in range(max(1, int(n))):
+                drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                    ran += 1
+                except _Rejected:
+                    continue
+            assert ran > 0, "assume() rejected every generated example"
+
+        # Strategy-provided params must not look like pytest fixtures: drop
+        # them from the reported signature (and the __wrapped__ chain pytest
+        # would otherwise follow back to the original).
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in kw_strategies]
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(params)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorator

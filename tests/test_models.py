@@ -181,15 +181,18 @@ def test_moe_respects_capacity_drops():
                               capacity_factor=1e-9)
     rng = np.random.default_rng(0)
     p = MOE.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
-    x = jnp.asarray(rng.normal(size=(1, 8, cfg.d_model)), jnp.float32)
+    # enough tokens that the top_k-slot capacity floor is a tiny fraction of
+    # the assignments (8 tokens would leave slots for every assignment)
+    n = 32
+    x = jnp.asarray(rng.normal(size=(1, n, cfg.d_model)), jnp.float32)
     y, _ = MOE.apply_moe(cfg, p, x)
     from repro.models.layers import apply_mlp
-    shared = apply_mlp(cfg, p["shared"], x.reshape(8, -1)).reshape(x.shape)
+    shared = apply_mlp(cfg, p["shared"], x.reshape(n, -1)).reshape(x.shape)
     # capacity floor is top_k slots; most tokens dropped -> y ≈ shared for
     # at least half the tokens
     close = np.isclose(np.asarray(y), np.asarray(shared), atol=1e-5) \
         .all(axis=-1).mean()
-    assert close > 0.3
+    assert close > 0.5, close
 
 
 def test_moe_flops_scale_with_active_not_total():

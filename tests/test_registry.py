@@ -1,0 +1,231 @@
+"""Registry coverage tests: for every registered op, the compiled lowering
+and the reference eval must agree bit-exactly on a random int8 graph (the
+paper's compiler-vs-interpreter equivalence, now structural), plus the
+batched ``predict`` path must be row-identical to batch-1 calls."""
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompiledModel, Interpreter
+from repro.core import graph as G
+from repro.core import registry as R
+from repro.core.builder import GraphBuilder
+from repro.core.quantize import quantize_graph
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _graph_for(op: str, rng, bsz=1):
+    """A small graph whose last (or only) interesting op is ``op``."""
+    b = GraphBuilder(op.lower())
+    if op == G.FULLY_CONNECTED:
+        x = b.input("x", (2, 8))
+        h = b.fully_connected(x, rng.normal(0, 0.5, (8, 6)).astype("f"),
+                              rng.normal(size=6).astype("f"), fused="RELU")
+        shape = (2, 8)
+    elif op == G.CONV_2D:
+        x = b.input("x", (bsz, 9, 9, 3))
+        h = b.conv2d(x, rng.normal(0, 0.4, (3, 3, 3, 5)).astype("f"),
+                     rng.normal(size=5).astype("f"), stride=(2, 2),
+                     padding="SAME", fused="RELU6")
+        shape = (bsz, 9, 9, 3)
+    elif op == G.DEPTHWISE_CONV_2D:
+        x = b.input("x", (bsz, 8, 8, 4))
+        h = b.depthwise_conv2d(x, rng.normal(0, 0.4, (3, 3, 4, 1)).astype("f"),
+                               rng.normal(size=4).astype("f"), padding="SAME")
+        shape = (bsz, 8, 8, 4)
+    elif op == G.AVERAGE_POOL_2D:
+        x = b.input("x", (bsz, 8, 8, 3))
+        h = b.average_pool2d(x, (2, 2))
+        shape = (bsz, 8, 8, 3)
+    elif op == G.MAX_POOL_2D:
+        x = b.input("x", (bsz, 8, 8, 3))
+        h = b.max_pool2d(x, (2, 2))
+        shape = (bsz, 8, 8, 3)
+    elif op == G.ADD:
+        x = b.input("x", (2, 6))
+        a = b.relu(x)
+        h = b.add(x, a)
+        shape = (2, 6)
+    elif op == G.PAD:
+        x = b.input("x", (bsz, 5, 5, 2))
+        h = b.pad(x, ((0, 0), (1, 2), (2, 1), (0, 0)))
+        shape = (bsz, 5, 5, 2)
+    elif op == G.RESHAPE:
+        x = b.input("x", (2, 12))
+        h = b.reshape(x, (4, 6))
+        shape = (2, 12)
+    elif op == G.RELU:
+        x = b.input("x", (3, 7))
+        h = b.relu(x)
+        shape = (3, 7)
+    elif op == G.RELU6:
+        x = b.input("x", (3, 7))
+        h = b.relu6(x)
+        shape = (3, 7)
+    elif op == G.SOFTMAX:
+        x = b.input("x", (3, 7))
+        h = b.softmax(x)
+        shape = (3, 7)
+    else:
+        raise AssertionError(f"no test graph for {op}")
+    b.output(h)
+    return b.build(), shape
+
+
+def test_registry_covers_full_vocabulary():
+    assert set(R.registered_ops()) == set(G.ALL_OPS)
+
+
+def test_weighted_metadata_consistent():
+    """weight_axis implies a ΣW fold spec and vice versa."""
+    for name in R.registered_ops():
+        d = R.get(name)
+        assert (d.weight_axis is None) == (d.w_sum_axes is None), name
+        assert (d.w_sum_axes is None) == (d.w_count_axes is None), name
+
+
+@pytest.mark.parametrize("op", G.ALL_OPS)
+def test_compiled_matches_reference_int8(op):
+    """Per-op equivalence: compiled lowering == reference eval, bit-exact,
+    through real quantized graphs."""
+    rng = np.random.default_rng(zlib.crc32(op.encode()))
+    g, shape = _graph_for(op, rng)
+    assert any(o.op == op for o in g.ops)
+    qg = quantize_graph(g, [rng.normal(size=shape).astype("f")
+                            for _ in range(4)])
+    x = rng.normal(size=shape).astype("f")
+    a = np.asarray(Interpreter(qg).invoke(x))
+    b = np.asarray(CompiledModel(qg).predict(x))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("op", G.ALL_OPS)
+def test_compiled_matches_reference_float(op):
+    rng = np.random.default_rng(zlib.crc32(op.encode()) + 1)
+    g, shape = _graph_for(op, rng)
+    x = rng.normal(size=shape).astype("f")
+    a = np.asarray(Interpreter(g).invoke(x))
+    b = np.asarray(CompiledModel(g).predict(x))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def _mlp(rng):
+    b = GraphBuilder("mlp")
+    x = b.input("x", (2, 8))
+    h = b.fully_connected(x, rng.normal(0, 0.5, (8, 16)).astype("f"),
+                          rng.normal(size=16).astype("f"), fused="RELU")
+    h = b.fully_connected(h, rng.normal(0, 0.5, (16, 4)).astype("f"),
+                          rng.normal(size=4).astype("f"))
+    h = b.softmax(h)
+    b.output(h)
+    return b.build()
+
+
+def _cnn(rng):
+    b = GraphBuilder("cnn")
+    x = b.input("x", (1, 12, 12, 3))
+    h = b.conv2d(x, rng.normal(0, 0.4, (3, 3, 3, 8)).astype("f"),
+                 rng.normal(size=8).astype("f"), stride=(2, 2),
+                 padding="SAME", fused="RELU6")
+    h = b.depthwise_conv2d(h, rng.normal(0, 0.4, (3, 3, 8, 1)).astype("f"),
+                           rng.normal(size=8).astype("f"), padding="SAME",
+                           fused="RELU")
+    h = b.max_pool2d(h, (2, 2))
+    h = b.average_pool2d(h, (3, 3))
+    h = b.reshape(h, (1, 8))
+    h = b.fully_connected(h, rng.normal(0, 0.4, (8, 4)).astype("f"), None)
+    h = b.softmax(h)
+    b.output(h)
+    return b.build()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_batched_predict_rows_identical_mlp(seed):
+    """predict with a leading batch dim == stacking batch-1 predicts."""
+    rng = np.random.default_rng(seed)
+    g = _mlp(rng)
+    qg = quantize_graph(g, [rng.normal(size=(2, 8)).astype("f")
+                            for _ in range(4)])
+    cm = CompiledModel(qg)
+    xb = rng.normal(size=(8, 2, 8)).astype("f")
+    yb = np.asarray(cm.predict(xb))
+    assert yb.shape[0] == 8
+    for i in range(8):
+        np.testing.assert_array_equal(yb[i], np.asarray(cm.predict(xb[i])))
+
+
+def test_batched_predict_rows_identical_cnn():
+    rng = np.random.default_rng(3)
+    g = _cnn(rng)
+    qg = quantize_graph(g, [rng.normal(size=(1, 12, 12, 3)).astype("f")
+                            for _ in range(4)])
+    cm = CompiledModel(qg)
+    xb = rng.normal(size=(5, 1, 12, 12, 3)).astype("f")
+    yb = np.asarray(cm.predict(xb))
+    for i in range(5):
+        np.testing.assert_array_equal(yb[i], np.asarray(cm.predict(xb[i])))
+
+
+def test_batched_bucket_cache_reused():
+    """Batch sizes sharing a power-of-two bucket share one AOT executable."""
+    rng = np.random.default_rng(5)
+    g = _mlp(rng)
+    qg = quantize_graph(g, [rng.normal(size=(2, 8)).astype("f")
+                            for _ in range(4)])
+    cm = CompiledModel(qg)
+    x8 = rng.normal(size=(8, 2, 8)).astype("f")
+    y8 = np.asarray(cm.predict(x8))
+    y5 = np.asarray(cm.predict(x8[:5]))  # bucket 8: padded, sliced
+    np.testing.assert_array_equal(y5, y8[:5])
+    assert list(cm._batched_aot) == [8]
+    np.asarray(cm.predict(x8[:1]))  # bucket 1 compiles separately
+    assert sorted(cm._batched_aot) == [1, 8]
+
+
+def test_batched_predict_pallas_and_paged_routes():
+    rng = np.random.default_rng(9)
+    g = _cnn(rng)
+    qg = quantize_graph(g, [rng.normal(size=(1, 12, 12, 3)).astype("f")
+                            for _ in range(4)])
+    cm = CompiledModel(qg, use_pallas=True)
+    xb = rng.normal(size=(4, 1, 12, 12, 3)).astype("f")
+    yb = np.asarray(cm.predict(xb))
+    for i in range(4):
+        np.testing.assert_array_equal(yb[i], np.asarray(cm.predict(xb[i])))
+
+    g2 = _mlp(rng)
+    qg2 = quantize_graph(g2, [rng.normal(size=(2, 8)).astype("f")
+                              for _ in range(4)])
+    pm = CompiledModel(qg2, paged={0: 4, 1: 4})
+    x2 = rng.normal(size=(3, 2, 8)).astype("f")
+    y2 = np.asarray(pm.predict(x2))
+    for i in range(3):
+        np.testing.assert_array_equal(y2[i], np.asarray(pm.predict(x2[i])))
+
+
+def test_predict_q_batched_int8_roundtrip():
+    rng = np.random.default_rng(11)
+    g = _mlp(rng)
+    qg = quantize_graph(g, [rng.normal(size=(2, 8)).astype("f")
+                            for _ in range(4)])
+    cm = CompiledModel(qg)
+    xq = rng.integers(-128, 128, (6, 2, 8)).astype(np.int8)
+    yq = np.asarray(cm.predict_q(xq))
+    assert yq.dtype == np.int8 and yq.shape[0] == 6
+    for i in range(6):
+        np.testing.assert_array_equal(yq[i], np.asarray(cm.predict_q(xq[i])))
+
+
+def test_multi_output_op_rejected():
+    """Graph.validate gives a clear error instead of the engines silently
+    dropping extra outputs."""
+    t = [G.TensorSpec("x", (2, 2), "float32"),
+         G.TensorSpec("a", (2, 2), "float32"),
+         G.TensorSpec("b", (2, 2), "float32")]
+    g = G.Graph(t, [G.OpNode(G.RELU, [0], [1, 2])], [0], [1])
+    with pytest.raises(AssertionError, match="multi-output"):
+        g.validate()
