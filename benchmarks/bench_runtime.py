@@ -1,8 +1,10 @@
 """Fig. 11 — inference latency, interpreter vs compiled engine (median of
-100 iterations), plus the Pallas-kernel variant and batched-serving
-throughput (one AOT executable per power-of-two batch bucket)."""
+100 iterations), plus the Pallas/MXU variant (graph-planned padded layout)
+and batched-serving throughput (one AOT executable per power-of-two batch
+bucket)."""
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from repro.core import CompiledModel, Interpreter
@@ -23,25 +25,31 @@ def main(fast: bool = False):
         us_i, lo, hi = median_time_us(lambda: interp.invoke_q(qx),
                                       iters=iters)
         lines.append(csv_line(f"runtime/{name}_interpreter_us", us_i,
-                              f"ci95=({lo:.0f},{hi:.0f})"))
+                              f"ci95=({lo:.0f};{hi:.0f})", ci=(lo, hi)))
 
         cm = CompiledModel(qg)
         cm.compile()
         us_c, lo, hi = median_time_us(
             lambda: np.asarray(cm.predict_q(qx)), iters=iters)
         lines.append(csv_line(f"runtime/{name}_compiled_us", us_c,
-                              f"ci95=({lo:.0f},{hi:.0f})"))
+                              f"ci95=({lo:.0f};{hi:.0f})", ci=(lo, hi)))
         lines.append(csv_line(f"runtime/{name}_speedup", 0.0,
                               f"{us_i/us_c:.2f}x"))
 
-        if name == "sine" or not fast:
+        # Pallas/MXU route with the compile-time padded-layout plan. The
+        # person model is the paper's flagship conv workload, so it is
+        # benchmarked even in --fast mode now that CONV_2D runs on the MXU.
+        if (not fast) or name in ("sine", "person"):
+            mode = "mxu" if jax.default_backend() == "tpu" else \
+                "interpret (validation mode, not perf)"
             cmp_ = CompiledModel(qg, use_pallas=True)
+            cmp_.compile()
             us_p, lo, hi = median_time_us(
                 lambda: np.asarray(cmp_.predict_q(qx)),
                 iters=max(iters // 4, 5))
             lines.append(csv_line(
-                f"runtime/{name}_compiled_pallas_interp_us", us_p,
-                "pallas interpret=True (CPU validation mode, not perf)"))
+                f"runtime/{name}_compiled_pallas_us", us_p,
+                f"planned layout; {mode}", ci=(lo, hi)))
 
         # Batched serving: amortize dispatch over B requests in one call.
         batch = 8 if fast else 32
@@ -51,7 +59,8 @@ def main(fast: bool = False):
             lambda: np.asarray(cm.predict_q(qxb)), iters=iters)
         lines.append(csv_line(
             f"runtime/{name}_compiled_batch{batch}_per_req_us",
-            us_b / batch, f"batch call {us_b:.0f}us, ci95=({lo:.0f},{hi:.0f})"))
+            us_b / batch, f"batch call {us_b:.0f}us ci95=({lo:.0f};{hi:.0f})",
+            ci=(lo / batch, hi / batch)))
     return lines
 
 

@@ -3,27 +3,45 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
+
+# Structured record per csv_line call — benchmarks.run serializes the
+# runtime section to BENCH_runtime.json so the perf trajectory is
+# machine-trackable across PRs.
+RECORDS = []
 
 
 def median_time_us(fn, iters: int = 100, warmup: int = 3):
     """Median wall time per call in microseconds (the paper's Fig. 11
-    protocol: 100 iterations, median + spread)."""
+    protocol: 100 iterations, median + spread).
+
+    Every call's result — warmup included — is blocked on with
+    ``jax.block_until_ready`` so device benches time compute, not async
+    dispatch. Non-JAX results (numpy, tuples) pass through unchanged."""
     for _ in range(warmup):
-        fn()
+        jax.block_until_ready(fn())
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        fn()
+        jax.block_until_ready(fn())
         ts.append((time.perf_counter() - t0) * 1e6)
     ts = np.asarray(ts)
     return float(np.median(ts)), float(np.percentile(ts, 2.5)), \
         float(np.percentile(ts, 97.5))
 
 
-def csv_line(name: str, us: float, derived: str = "") -> str:
-    line = f"{name},{us:.2f},{derived}"
+def csv_line(name: str, us: float, derived: str = "", ci=None) -> str:
+    """Print one CSV line and keep a structured record of it.
+
+    The trailing column records ``jax.default_backend()`` so interpret-mode
+    Pallas numbers (CPU) can't be mistaken for TPU perf."""
+    backend = jax.default_backend()
+    line = f"{name},{us:.2f},{derived},{backend}"
     print(line)
+    RECORDS.append({"name": name, "median_us": float(us),
+                    "ci95": None if ci is None else [float(c) for c in ci],
+                    "backend": backend, "derived": derived})
     return line
 
 

@@ -2,27 +2,35 @@
 
   PYTHONPATH=src python -m benchmarks.run [--fast]
 
-Prints ``name,us_per_call,derived`` CSV lines. The roofline benchmark
-(which spawns 512-device compiles) runs standalone:
+Prints ``name,us_per_call,derived,backend`` CSV lines. When the runtime
+bench runs, a machine-readable ``BENCH_runtime.json`` (name ->
+median_us/ci95/backend) is written alongside the CSV so the perf trajectory
+is trackable across PRs. The roofline benchmark (which spawns 512-device
+compiles) runs standalone:
   PYTHONPATH=src python -m benchmarks.bench_roofline
 run.py includes its cached table when present.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
+
+JSON_OUT = "BENCH_runtime.json"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--json-out", default=JSON_OUT,
+                    help="path for the runtime-bench JSON summary")
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_memory, bench_runtime,
-                            bench_paging, bench_energy)
+                            bench_paging, bench_energy, common)
     benches = {
         "accuracy": bench_accuracy.main,   # Table 5
         "memory": bench_memory.main,       # Figs. 9/10
@@ -30,14 +38,27 @@ def main() -> None:
         "paging": bench_paging.main,       # Sec. 4.3 / Fig. 6
         "energy": bench_energy.main,       # Table 6 (derived)
     }
-    print("name,us_per_call,derived")
+    del common.RECORDS[:]
+    print("name,us_per_call,derived,backend")
     all_lines = []
+    ran = []
     for name, fn in benches.items():
         if args.only and name not in args.only:
             continue
         t0 = time.time()
         all_lines += fn(fast=args.fast)
+        ran.append(name)
         print(f"# bench {name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+    if "runtime" in ran:
+        doc = {r["name"]: {"median_us": r["median_us"], "ci95": r["ci95"],
+                           "backend": r["backend"]}
+               for r in common.RECORDS if r["name"].startswith("runtime/")}
+        with open(args.json_out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json_out} ({len(doc)} entries)",
               file=sys.stderr)
 
     roofline = "results/roofline.csv"
@@ -46,7 +67,7 @@ def main() -> None:
         print("# roofline (cached from benchmarks.bench_roofline):")
         with open(roofline) as f:
             for line in f:
-                print("roofline/" + line.strip() + ",0.0,")
+                print("roofline/" + line.strip() + ",0.0,,")
 
 
 if __name__ == "__main__":

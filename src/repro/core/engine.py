@@ -17,8 +17,12 @@ interpreter baseline consumes the same registry, so engine parity is
 structural rather than a convention.
 
 Options:
-  use_pallas  — route quantized FullyConnected / DepthwiseConv through the
-                Pallas MXU kernels (``repro.kernels``), interpret-mode on CPU.
+  use_pallas  — route quantized FullyConnected / Conv2D / DepthwiseConv
+                through the Pallas MXU kernels (``repro.kernels``),
+                interpret-mode on CPU. A compile-time layout plan
+                (``preprocess.plan_layout``) keeps activations lane-padded
+                across consecutive Pallas ops — padding only at graph entry,
+                slicing only at graph outputs and non-Pallas boundaries.
   paged       — {op_index: n_pages}: execute those FC layers page-by-page
                 (Sec. 4.3), bounding resident weight bytes.
 
@@ -38,33 +42,49 @@ import numpy as np
 from . import graph as G
 from . import registry as R
 from .memory import memory_report
-from .preprocess import preprocess_graph
+from .preprocess import plan_layout, preprocess_graph
 
 
 def build_graph_fn(g: G.Graph, folded: dict, use_pallas: bool = False,
-                   paged: Optional[dict] = None, batched: bool = False):
+                   paged: Optional[dict] = None, batched: bool = False,
+                   plan=None):
     """Returns fn(*graph_dtype_inputs) -> tuple(graph_dtype_outputs).
 
     With ``batched=True`` every activation (inputs included) carries one
     extra leading batch dimension and ops run through their registry batch
     rules.
+
+    With a ``plan`` (``preprocess.LayoutPlan``), Pallas-routed ops exchange
+    activations in lane-padded physical layout: padding happens only at
+    graph entry, slicing only at graph outputs and non-Pallas boundaries —
+    interior Pallas→Pallas edges carry the padded block untouched.
     """
     paged = paged or {}
     run = R.run_batched if batched else R.run_compiled
+    layouts = plan.layouts if plan is not None else {}
+    phys = plan.phys if plan is not None else {}
 
     def fn(*inputs):
         env = dict(zip(g.inputs, inputs))
 
-        def val(tid):
+        def val(tid, keep_padded=False):
             t = g.tensor(tid)
-            return jnp.asarray(t.data) if t.is_const else env[tid]
+            if t.is_const:
+                return jnp.asarray(t.data)
+            v = env[tid]
+            if not keep_padded and tid in phys:
+                v = v[tuple(slice(0, d) for d in t.shape)]
+            return v
 
         for i, op in enumerate(g.ops):
+            lay = layouts.get(i)
             ctx = R.OpContext(g, op, i, folded=folded.get(i),
-                              use_pallas=use_pallas, n_pages=paged.get(i))
-            env[op.outputs[0]] = run(ctx, [val(t) for t in op.inputs])
+                              use_pallas=use_pallas, n_pages=paged.get(i),
+                              layout=lay)
+            env[op.outputs[0]] = run(ctx, [val(t, keep_padded=lay is not None)
+                                           for t in op.inputs])
 
-        return tuple(env[t] for t in g.outputs)
+        return tuple(val(t) for t in g.outputs)
 
     return fn
 
@@ -79,15 +99,22 @@ class CompiledModel:
     """The user-facing ``predict()`` the paper's ``model`` macro generates."""
 
     def __init__(self, g: G.Graph, use_pallas: bool = False,
-                 paged: Optional[dict] = None):
+                 paged: Optional[dict] = None, layout_plan: bool = True):
         g.validate()
         self.graph = g
         self.use_pallas = use_pallas
         self.paged = paged
         self.folded = preprocess_graph(g)  # compile-time parser phase
-        self._fn = jax.jit(build_graph_fn(g, self.folded, use_pallas, paged))
+        # Compile-time padded-layout plan: activations stay lane-padded
+        # across consecutive Pallas-routed ops (layout_plan=False keeps the
+        # per-call pad/slice route, for debugging and A/B benchmarks).
+        self.plan = (plan_layout(g, self.folded, paged)
+                     if (use_pallas and layout_plan) else None)
+        self._fn = jax.jit(build_graph_fn(g, self.folded, use_pallas, paged,
+                                          plan=self.plan))
         self._aot = None
         self._batched_aot = {}  # bucket size -> AOT executable
+        self._stage_pad = {}    # (shape, pad) -> jitted device-side pad
 
     def _input_specs(self, lead=()):
         return [jax.ShapeDtypeStruct(tuple(lead) + self.graph.tensor(t).shape,
@@ -101,13 +128,21 @@ class CompiledModel:
         return self._aot
 
     def compile_batched(self, batch: int):
-        """AOT-compile (and cache) the executable for ``batch``'s bucket."""
+        """AOT-compile (and cache) the executable for ``batch``'s bucket.
+
+        Input buffers are donated where the backend supports it — the
+        batched path always stages fresh device buffers (see
+        ``_predict_q_batched``), so donation is safe and lets XLA reuse the
+        int8 input storage for activations."""
         bucket = _bucket(batch)
         exe = self._batched_aot.get(bucket)
         if exe is None:
+            donate = (tuple(range(len(self.graph.inputs)))
+                      if jax.default_backend() != "cpu" else ())
             fn = jax.jit(build_graph_fn(self.graph, self.folded,
                                         self.use_pallas, self.paged,
-                                        batched=True))
+                                        batched=True),
+                         donate_argnums=donate)
             exe = fn.lower(*self._input_specs(lead=(bucket,))).compile()
             self._batched_aot[bucket] = exe
         return exe
@@ -136,6 +171,17 @@ class CompiledModel:
         t0 = self.graph.tensor(self.graph.inputs[0])
         return np.ndim(first_input) == len(t0.shape) + 1
 
+    def _bucket_pad(self, shape: tuple, pad: int):
+        """Jitted device-side zero-pad of the leading (batch) dim — the
+        bucket fill never round-trips through host memory."""
+        key = (shape, pad)
+        fn = self._stage_pad.get(key)
+        if fn is None:
+            widths = ((0, pad),) + ((0, 0),) * (len(shape) - 1)
+            fn = jax.jit(lambda a: jnp.pad(a, widths))
+            self._stage_pad[key] = fn
+        return fn
+
     def _predict_q_batched(self, inputs):
         batch = np.asarray(inputs[0]).shape[0]
         bucket = _bucket(batch)
@@ -145,10 +191,10 @@ class CompiledModel:
             a = np.asarray(arr, t.dtype).reshape((-1,) + t.shape)
             assert a.shape[0] == batch, (
                 f"all inputs must share the batch dim: {a.shape[0]} != {batch}")
+            a = jnp.asarray(a)  # H2D of the real rows only
             if bucket != batch:
-                a = np.concatenate(
-                    [a, np.zeros((bucket - batch,) + t.shape, t.dtype)])
-            args.append(jnp.asarray(a))
+                a = self._bucket_pad(a.shape, bucket - batch)(a)
+            args.append(a)
         outs = self.compile_batched(batch)(*args)
         outs = tuple(np.asarray(o)[:batch] for o in outs)
         return outs if len(outs) > 1 else outs[0]

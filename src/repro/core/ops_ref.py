@@ -23,6 +23,15 @@ import numpy as np
 
 I8_MIN, I8_MAX = -128, 127
 
+# MXU lane width — the layout quantum shared by the Pallas kernels
+# (repro.kernels) and the compile-time layout planner (preprocess.plan_layout).
+MXU_LANES = 128
+
+
+def round_up(x: int, m: int) -> int:
+    """Round x up to a multiple of m (lane/tile alignment)."""
+    return -(-x // m) * m
+
 
 @dataclasses.dataclass(frozen=True)
 class FoldedConsts:
@@ -65,6 +74,21 @@ def _fused_bounds(fused: str, z_y, s_y):
     elif fused != "NONE":
         raise ValueError(fused)
     return lo, hi
+
+
+def clamp_bounds(fc: "FoldedConsts", fused: str):
+    """Static (python float) clamp bounds of a fused activation — the
+    compile-time form of :func:`_fused_bounds`, consumed by the Pallas
+    kernel wrappers and the layout planner."""
+    z_y = float(np.asarray(fc.z_y))
+    s_y = float(np.asarray(fc.s_y))
+    if fused == "RELU":
+        return z_y, float("inf")
+    if fused == "RELU6":
+        return z_y, z_y + 6.0 / s_y
+    if fused == "NONE":
+        return float("-inf"), float("inf")
+    raise ValueError(fused)
 
 
 def _apply_fused_float(y, fused: str):

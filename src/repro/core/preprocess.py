@@ -4,14 +4,24 @@ For every weighted operator, the four constant terms of Eqs. (4), (7), (10)
 are computed here, once, on the host, and baked into the compiled executable.
 The runtime kernel (ops_ref / kernels) then only computes the input-dependent
 terms. This is the paper's central compiler-based optimization.
+
+:func:`plan_layout` extends the same principle to TPU tiling: one walk over
+the graph at compile time assigns every Pallas-routed op a lane-padded
+physical layout — weights and per-channel constants are pre-padded here, on
+the host, and activations stay in padded layout across consecutive
+Pallas-routed layers (padding only at graph entry, slicing only at graph
+outputs and non-Pallas boundaries). Without the plan, every kernel call
+pays a pad→slice round trip on its operands.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from . import graph as G
 from . import registry
-from .ops_ref import FoldedConsts
+from .ops_ref import FoldedConsts, MXU_LANES, clamp_bounds, round_up
 
 
 def _scalar_or_channel(qp: G.QParams):
@@ -69,6 +79,120 @@ def preprocess_graph(g: G.Graph) -> dict:
             if g.tensor(op.inputs[0]).dtype == "int8":
                 folded[i] = fold_weighted_op(g, op)
     return folded
+
+
+# ---------------------------------------------------------------------------
+# Graph-level padded-layout planning
+# ---------------------------------------------------------------------------
+
+def _grow_const(v, n: int, n_pad: int, dtype) -> np.ndarray:
+    """Broadcast a scalar/per-channel folded constant to ``n`` channels and
+    zero-pad to the planned lane width — on the host, once."""
+    out = np.zeros(n_pad, dtype)
+    out[:n] = np.broadcast_to(np.asarray(v, dtype).reshape(-1), (n,))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class OpLayout:
+    """Compile-time physical layout of one Pallas-routed op.
+
+    ``w_phys``/``consts`` are the kernel-ready, lane-padded weights and
+    folded Eq. (4)/(7)/(10) constants, padded HERE on the host instead of
+    inside every traced call. ``in_lanes``/``out_shape`` describe the padded
+    activation layout the op consumes/produces; ``n_true`` is the logical
+    channel count (the kernels zero everything beyond it, which is what
+    makes chained padded layers exact).
+    """
+
+    kind: str            # "fc" | "conv" | "dwconv"
+    w_phys: np.ndarray   # fc: (K', N'); conv: (kh*kw*Cin', N'); dw: (kh, kw, C')
+    consts: tuple        # 5 × (N',) per-channel folded constants
+    lo: float            # fused-activation clamp bounds (static)
+    hi: float
+    n_true: int          # logical output channels / FC columns
+    in_lanes: int        # physical lane width expected on the activation input
+    out_shape: tuple     # physical (padded) output shape
+    c_true: int          # logical input channels (border-fill mask for conv)
+    z_x: int             # input zero point (SAME border fill)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutPlan:
+    """op index -> OpLayout, plus tensor id -> physical shape for every
+    activation stored in padded layout (all others stay logical)."""
+
+    layouts: dict
+    phys: dict
+
+
+def plan_layout(g: G.Graph, folded: dict, paged=None) -> LayoutPlan:
+    """One compile-time walk assigning lane-padded physical layouts.
+
+    An op is planned iff it would take the Pallas route in the compiled
+    engine (quantized + folded + a registered ``lower_pallas`` + not paged
+    — paging wins, exactly as in ``registry.run_compiled``). Exactness of
+    the padded layouts rests on two invariants: (a) planned kernels zero
+    their padding lanes, so a downstream contraction's K-padding contributes
+    nothing to Σ X W or Σ X; (b) SAME borders carry z_X only on real lanes.
+    """
+    paged = paged or {}
+    layouts, phys = {}, {}
+    for i, op in enumerate(g.ops):
+        fc = folded.get(i)
+        if fc is None or paged.get(i):
+            continue
+        if registry.get(op.op).lower_pallas is None:
+            continue
+        w_t = g.tensor(op.inputs[1])
+        y_t = g.tensor(op.outputs[0])
+        lo, hi = clamp_bounds(fc, op.attrs.get("fused", "NONE"))
+        z_x = int(np.asarray(fc.z_x))
+        w = w_t.data
+
+        if op.op == G.FULLY_CONNECTED:
+            if len(g.tensor(op.inputs[0]).shape) != 2:
+                continue  # rank-folding FC stays on the per-call route
+            k, n = w.shape
+            m = g.tensor(op.inputs[0]).shape[0]
+            kp, np_, mp = (round_up(d, MXU_LANES) for d in (k, n, m))
+            w_phys = np.zeros((kp, np_), np.int8)
+            w_phys[:k, :n] = w
+            lay = OpLayout("fc", w_phys, _planned_consts(fc, n, np_),
+                           lo, hi, n, kp, (mp, np_), k, z_x)
+        elif op.op == G.CONV_2D:
+            kh, kw, cin, cout = w.shape
+            cin_p = round_up(cin, MXU_LANES)
+            np_ = round_up(cout, MXU_LANES)
+            f = np.zeros((kh, kw, cin_p, cout), np.int8)
+            f[:, :, :cin, :] = w
+            w_phys = np.zeros((kh * kw * cin_p, np_), np.int8)
+            w_phys[:, :cout] = f.reshape(kh * kw * cin_p, cout)
+            lay = OpLayout("conv", w_phys, _planned_consts(fc, cout, np_),
+                           lo, hi, cout, cin_p, y_t.shape[:3] + (np_,),
+                           cin, z_x)
+        else:  # DEPTHWISE_CONV_2D
+            assert w.shape[3] == 1, (
+                "depth multiplier 1 only (matches the kernel contract)")
+            kh, kw, c, _ = w.shape
+            cp = round_up(c, MXU_LANES)
+            w_phys = np.zeros((kh, kw, cp), np.int8)
+            w_phys[:, :, :c] = w[..., 0]
+            lay = OpLayout("dwconv", w_phys, _planned_consts(fc, c, cp),
+                           lo, hi, c, cp, y_t.shape[:3] + (cp,), c, z_x)
+
+        layouts[i] = lay
+        if tuple(lay.out_shape) != tuple(y_t.shape):
+            phys[op.outputs[0]] = tuple(lay.out_shape)
+    return LayoutPlan(layouts, phys)
+
+
+def _planned_consts(fc: FoldedConsts, n: int, n_pad: int) -> tuple:
+    return (_grow_const(fc.bias_term, n, n_pad, np.float32),
+            _grow_const(fc.rescale, n, n_pad, np.float32),
+            _grow_const(fc.w_sum_zx, n, n_pad, np.int32),
+            _grow_const(fc.const_off, n, n_pad, np.int32),
+            _grow_const(fc.z_w, n, n_pad, np.int32))
 
 
 def folded_const_bytes(folded: dict) -> int:

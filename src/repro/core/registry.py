@@ -83,7 +83,10 @@ class OpContext:
     """Everything a lowering needs about one op instance.
 
     ``folded``/``use_pallas``/``n_pages`` are compiled-engine routing state;
-    the reference path ignores them.
+    the reference path ignores them. ``layout`` is the compile-time padded
+    layout assigned by ``preprocess.plan_layout`` — when set, the Pallas
+    lowering consumes/produces lane-padded activations instead of paying a
+    per-call pad/slice round trip.
     """
 
     g: G.Graph
@@ -92,6 +95,7 @@ class OpContext:
     folded: Optional[K.FoldedConsts] = None
     use_pallas: bool = False
     n_pages: Optional[int] = None
+    layout: Optional[object] = None  # preprocess.OpLayout
 
     def t_in(self, j: int) -> G.TensorSpec:
         return self.g.tensor(self.op.inputs[j])
@@ -252,6 +256,8 @@ def _fc_compiled(ctx, x, w, b=None):
 
 def _fc_pallas(ctx, x, w, b=None):
     from repro.kernels import ops as pallas_ops
+    if ctx.layout is not None:
+        return pallas_ops.qmatmul_planned(x, ctx.layout)
     return pallas_ops.qmatmul_folded(x, w, ctx.folded, ctx.fused)
 
 
@@ -296,10 +302,20 @@ def _conv_compiled(ctx, x, f, b=None):
     return K.conv2d_folded(x, f, ctx.folded, fused=ctx.fused, **kw)
 
 
+def _conv_pallas(ctx, x, f, b=None):
+    from repro.kernels import ops as pallas_ops
+    geo = _conv_geometry(ctx)
+    if ctx.layout is not None:
+        return pallas_ops.qconv_planned(x, ctx.layout, kh=f.shape[0],
+                                        kw=f.shape[1], **geo)
+    return pallas_ops.qconv_folded(x, f, ctx.folded, fused=ctx.fused, **geo)
+
+
 register(
     G.CONV_2D,
     eval_reference=_conv_reference,
     lower_compiled=_conv_compiled,
+    lower_pallas=_conv_pallas,
     batched=_merge_lead2,
     weight_axis=3,
     w_sum_axes=(0, 1, 2),
@@ -325,6 +341,8 @@ def _dwconv_compiled(ctx, x, w, b=None):
 
 def _dwconv_pallas(ctx, x, w, b=None):
     from repro.kernels import ops as pallas_ops
+    if ctx.layout is not None:
+        return pallas_ops.qdwconv_planned(x, ctx.layout, **_conv_geometry(ctx))
     return pallas_ops.qdwconv_folded(x, w, ctx.folded, fused=ctx.fused,
                                      **_conv_geometry(ctx))
 

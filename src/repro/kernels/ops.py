@@ -1,48 +1,45 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-Handle the engine-facing plumbing: fused-activation bounds from FoldedConsts,
-padding to MXU-aligned tiles (lanes 128), SAME→VALID border pre-padding with
-the input zero point, and interpret-mode selection (interpret=True on CPU —
-the kernel body then executes in Python for validation; on TPU it compiles
-to Mosaic).
+Two families of entry points:
+
+* ``*_folded`` — the original per-call route: logical-shape int8 in/out.
+  Each call pads its operands to MXU-aligned tiles (lanes 128) and slices
+  the result back, so consecutive layers pay a pad→slice→pad round trip.
+* ``*_planned`` — the graph-planned route (``preprocess.plan_layout``):
+  weights and folded constants arrive pre-padded from compile time, the
+  activation input is consumed in lane-padded physical layout (padded only
+  if it arrives logical, i.e. at graph entry), and the output is *kept*
+  padded with its padding lanes zeroed by the kernel. Chained Pallas layers
+  therefore stay tile-resident — layout work happens once, at compile time,
+  the MicroFlow/TFLM principle applied to TPU tiling.
+
+Both families handle fused-activation bounds, SAME→VALID border pre-padding
+with the input zero point, and interpret-mode selection (interpret=True off
+TPU — the kernel body then executes in Python for validation; on TPU it
+compiles to Mosaic).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.ops_ref import FoldedConsts, pad_input_q, same_pads
+from repro.core.ops_ref import (FoldedConsts, MXU_LANES, clamp_bounds,
+                                pad_input_q, round_up, same_pads)
 from . import qmatmul as _qm
 from . import paged_matmul as _pm
 from . import qdwconv as _dw
+from . import qconv as _qc
 
-LANE = 128
+LANE = MXU_LANES
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _bounds(fc: FoldedConsts, fused: str):
-    z_y = float(np.asarray(fc.z_y))
-    s_y = float(np.asarray(fc.s_y))
-    if fused == "RELU":
-        return z_y, float("inf")
-    if fused == "RELU6":
-        return z_y, z_y + 6.0 / s_y
-    if fused == "NONE":
-        return float("-inf"), float("inf")
-    raise ValueError(fused)
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
 def _pad2(a, m0, m1, value=0):
-    p0 = _round_up(a.shape[0], m0) - a.shape[0]
-    p1 = _round_up(a.shape[1], m1) - a.shape[1]
+    p0 = round_up(a.shape[0], m0) - a.shape[0]
+    p1 = round_up(a.shape[1], m1) - a.shape[1]
     if p0 or p1:
         a = jnp.pad(a, ((0, p0), (0, p1)), constant_values=value)
     return a
@@ -57,6 +54,19 @@ def _pad_channel_consts(fc: FoldedConsts, n: int, n_pad: int):
             grow(fc.z_w, jnp.int32))
 
 
+def _lane_pad(x, lanes: int):
+    """Zero-pad the trailing (lane) dimension to the planned physical width.
+    A no-op when the producer already emitted padded layout."""
+    if x.shape[-1] != lanes:
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 1)
+                    + ((0, lanes - x.shape[-1]),))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# FULLY_CONNECTED
+# ---------------------------------------------------------------------------
+
 def qmatmul_folded(x_q, w_q, fc: FoldedConsts, fused: str = "NONE",
                    *, paged: bool = False, page: int = LANE):
     """Engine entry point: folded Eq. (3) on the MXU-tiled Pallas kernel.
@@ -69,7 +79,7 @@ def qmatmul_folded(x_q, w_q, fc: FoldedConsts, fused: str = "NONE",
         x_q = x_q.reshape((-1, x_q.shape[-1]))
     m, k = x_q.shape
     _, n = w_q.shape
-    lo, hi = _bounds(fc, fused)
+    lo, hi = clamp_bounds(fc, fused)
     xp = _pad2(x_q, LANE, LANE)
     wp = _pad2(w_q, LANE, LANE)
     consts = _pad_channel_consts(fc, n, wp.shape[1])
@@ -82,6 +92,20 @@ def qmatmul_folded(x_q, w_q, fc: FoldedConsts, fused: str = "NONE",
     return out[:m, :n].reshape(lead + (n,))
 
 
+def qmatmul_planned(x_q, lay):
+    """Planned-layout FC: x arrives logical (graph entry) or already in the
+    (M', K') padded physical layout; the output STAYS padded, its padding
+    lanes zeroed by the kernel."""
+    mp, np_lanes = lay.out_shape
+    if x_q.shape != (mp, lay.in_lanes):
+        x_q = _pad2(x_q, LANE, LANE)
+    return _qm.qmatmul(x_q, jnp.asarray(lay.w_phys),
+                       *(jnp.asarray(c) for c in lay.consts),
+                       lo=lay.lo, hi=lay.hi,
+                       n_true=lay.n_true if np_lanes != lay.n_true else None,
+                       interpret=_interpret())
+
+
 def fmatmul(x, w):
     """Float matmul on the Pallas kernel (dtype sweeps / float FC path)."""
     m, k = x.shape
@@ -91,6 +115,69 @@ def fmatmul(x, w):
     return out[:m, :n]
 
 
+# ---------------------------------------------------------------------------
+# CONV_2D — Eq. (7) via im2col on the same MXU contraction
+# ---------------------------------------------------------------------------
+
+def qconv_folded(x_q, f_q, fc: FoldedConsts, *, stride, padding,
+                 fused: str = "NONE"):
+    """Engine entry point: folded Eq. (7) on the im2col/MXU kernel.
+    Logical int8 NHWC in/out; SAME borders pre-padded with z_X."""
+    stride = tuple(stride)
+    kh, kw, cin, cout = f_q.shape
+    lo, hi = clamp_bounds(fc, fused)
+    x_q = pad_input_q(x_q, kh, kw, stride, padding, fc.z_x)
+    w_mat = _pad2(f_q.reshape(kh * kw * cin, cout), LANE, LANE)
+    consts = _pad_channel_consts(fc, cout, w_mat.shape[1])
+    out = _qc.qconv2d(x_q, w_mat, *consts, kh=kh, kw=kw, stride=stride,
+                      lo=lo, hi=hi, interpret=_interpret())
+    return out[..., :cout]
+
+
+def _pad_border_planned(x_q, kh, kw, stride, padding, z_x: int, c_true: int):
+    """SAME→VALID pre-pad in padded-lane layout.
+
+    Border entries must carry the input zero point on the ``c_true`` real
+    lanes (so (X - z_X) vanishes there, keeping the folded ΣW term exact)
+    but ZERO on the padding lanes (so they contribute nothing to the im2col
+    rows' Σ X). A plain ``pad_input_q`` would leak z_X into padding lanes.
+    """
+    if padding == "VALID":
+        return x_q
+    b, h, w, lanes = x_q.shape
+    (pt, pb), (pl_, pr) = same_pads(h, w, kh, kw, stride)
+    if not (pt or pb or pl_ or pr):
+        return x_q
+    xp = jnp.pad(x_q, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    if z_x == 0 or c_true == 0:
+        return xp
+    row = jnp.arange(h + pt + pb)
+    col = jnp.arange(w + pl_ + pr)
+    border = (((row < pt) | (row >= pt + h))[:, None]
+              | ((col < pl_) | (col >= pl_ + w))[None, :])
+    fill = jnp.where(jnp.arange(lanes) < c_true, z_x, 0).astype(x_q.dtype)
+    return jnp.where(border[None, :, :, None], fill, xp)
+
+
+def qconv_planned(x_q, lay, *, kh, kw, stride, padding):
+    """Planned-layout Conv2D: lane-padded NHWC in (padded here only at graph
+    entry), lane-padded NHWC out with padding lanes zeroed."""
+    stride = tuple(stride)
+    x_q = _lane_pad(x_q, lay.in_lanes)
+    x_q = _pad_border_planned(x_q, kh, kw, stride, padding, lay.z_x,
+                              lay.c_true)
+    np_lanes = lay.out_shape[-1]
+    return _qc.qconv2d(x_q, jnp.asarray(lay.w_phys),
+                       *(jnp.asarray(c) for c in lay.consts),
+                       kh=kh, kw=kw, stride=stride, lo=lay.lo, hi=lay.hi,
+                       n_true=lay.n_true if np_lanes != lay.n_true else None,
+                       interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# DEPTHWISE_CONV_2D
+# ---------------------------------------------------------------------------
+
 def qdwconv_folded(x_q, w_q, fc: FoldedConsts, *, stride, padding,
                    fused: str = "NONE", bc: int = LANE):
     """Engine entry point: folded Eq. (9) on the channel-blocked Pallas
@@ -99,15 +186,15 @@ def qdwconv_folded(x_q, w_q, fc: FoldedConsts, *, stride, padding,
     stride = tuple(stride)
     kh, kw, c, mult = w_q.shape
     assert mult == 1
-    lo, hi = _bounds(fc, fused)
+    lo, hi = clamp_bounds(fc, fused)
     x_q = pad_input_q(x_q, kh, kw, stride, padding, fc.z_x)
     b, H, W, _ = x_q.shape
     sh, sw = stride
     oh = (H - kh) // sh + 1
     ow = (W - kw) // sw + 1
 
-    bc = min(bc, _round_up(c, 8))
-    c_pad = _round_up(c, bc)
+    bc = min(bc, round_up(c, 8))
+    c_pad = round_up(c, bc)
     if c_pad != c:
         x_q = jnp.pad(x_q, ((0, 0), (0, 0), (0, 0), (0, c_pad - c)))
     w3 = jnp.pad(w_q[..., 0], ((0, 0), (0, 0), (0, c_pad - c)))
@@ -122,3 +209,24 @@ def qdwconv_folded(x_q, w_q, fc: FoldedConsts, *, stride, padding,
     out = _dw.qdwconv(x_q, w3, *consts, stride=stride, out_hw=(oh, ow),
                       bc=bc, lo=lo, hi=hi, interpret=_interpret())
     return out[..., :c]
+
+
+def qdwconv_planned(x_q, lay, *, stride, padding):
+    """Planned-layout DepthwiseConv2D: lane-padded NHWC in/out. Depthwise
+    math never mixes lanes, so borders may carry z_X on padding lanes too —
+    those outputs are zero-masked by the kernel (``c_true``)."""
+    stride = tuple(stride)
+    kh, kw, _ = lay.w_phys.shape
+    x_q = _lane_pad(x_q, lay.in_lanes)
+    x_q = pad_input_q(x_q, kh, kw, stride, padding, lay.z_x)
+    b, H, W, _ = x_q.shape
+    sh, sw = stride
+    oh = (H - kh) // sh + 1
+    ow = (W - kw) // sw + 1
+    cp = lay.out_shape[-1]
+    return _dw.qdwconv(x_q, jnp.asarray(lay.w_phys),
+                       *(jnp.asarray(c) for c in lay.consts),
+                       stride=stride, out_hw=(oh, ow), bc=min(LANE, cp),
+                       lo=lay.lo, hi=lay.hi,
+                       c_true=lay.n_true if cp != lay.n_true else None,
+                       interpret=_interpret())

@@ -1,0 +1,85 @@
+"""Quantized Conv2D Pallas route — Eq. (7) on the MXU, via im2col.
+
+The paper's flagship workload (person detection, Fig. 11) is dominated by
+ordinary convolutions, which previously fell back to the generic XLA
+lowering. Here CONV_2D is patch-tiled into the *same* K-innermost MXU
+contraction as FullyConnected (``qmatmul``): each output position's
+receptive field becomes one row of an (M, K) = (B·OH·OW, kh·kw·C) int8
+matrix, the HWIO filter flattens to (K, Cout), and the folded Eq. (7)
+constants + fused RELU/RELU6 clamp are applied once per output tile in the
+kernel epilogue. The input-dependent ``z_W · Σ X`` term rides along in the
+same pass, exactly as in the FC kernel.
+
+Exactness: zero K/M padding contributes nothing to either Σ X W or Σ X
+(padded filter rows are zero, padded patch lanes are zero), so the tiled
+result is bit-identical to the reference after slicing — the same argument
+that makes ``qmatmul_folded`` exact.
+
+The 1×1/stride-1 case (all 13 pointwise convs of MobileNetV1) degenerates
+to a pure reshape — no patch extraction at all — which is what lets the
+graph-level layout planner keep activations tile-resident across dw/pw
+chains.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ops_ref import MXU_LANES, round_up
+from . import qmatmul as _qm
+
+
+def im2col_q(x_q, kh: int, kw: int, stride):
+    """(B, H, W, C) -> ((B*OH*OW, kh*kw*C), (B, OH, OW)) for a VALID conv.
+
+    Static tap loop (the MCU's Algorithm 1 "view extraction" as strided
+    slices); row layout is tap-major / channel-minor, matching
+    ``filter.reshape(kh*kw*C, Cout)`` for HWIO filters. Exact on int8.
+    """
+    b, H, W, c = x_q.shape
+    sh, sw = stride
+    oh = (H - kh) // sh + 1
+    ow = (W - kw) // sw + 1
+    if kh == kw == 1 and sh == sw == 1:
+        # Pointwise conv: the patch matrix IS the activation block.
+        return x_q.reshape(b * oh * ow, c), (b, oh, ow)
+    taps = []
+    for i in range(kh):
+        for j in range(kw):
+            taps.append(jax.lax.slice(
+                x_q, (0, i, j, 0),
+                (b, i + (oh - 1) * sh + 1, j + (ow - 1) * sw + 1, c),
+                (1, sh, sw, 1)))                       # (b, oh, ow, c)
+    patches = jnp.concatenate(taps, axis=-1) if len(taps) > 1 else taps[0]
+    return patches.reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def qconv2d(x_q, w_mat, bias_term, rescale, w_sum_zx, const_off, z_w, *,
+            kh, kw, stride, lo=-jnp.inf, hi=jnp.inf, n_true=None,
+            interpret=False):
+    """Quantized VALID conv on the MXU contraction kernel.
+
+    x_q    (B, H, W, Cl) int8, already spatially pre-padded (SAME handled by
+           the caller with the input zero point) — Cl is the lane-layout
+           channel count the caller built ``w_mat`` for.
+    w_mat  (K', N') int8 with K' = round_up(kh*kw*Cl, 128) and N' a lane
+           multiple: the flattened HWIO filter, zero-padded.
+    consts (N',) per-output-channel folded Eq. (7) terms.
+
+    Returns (B, OH, OW, N') int8 — lanes >= ``n_true`` are zero when set
+    (padded-layout contract); the caller slices to Cout when it needs the
+    logical shape.
+    """
+    stride = tuple(stride)
+    mat, (b, oh, ow) = im2col_q(x_q, kh, kw, stride)
+    m, k = mat.shape
+    mp = round_up(m, MXU_LANES)
+    kp = round_up(k, MXU_LANES)
+    if (mp, kp) != (m, k):
+        mat = jnp.pad(mat, ((0, mp - m), (0, kp - k)))
+    assert w_mat.shape[0] == kp, (w_mat.shape, kp)
+    out = _qm.qmatmul(mat, w_mat, bias_term, rescale, w_sum_zx, const_off,
+                      z_w, lo=lo, hi=hi, n_true=n_true, interpret=interpret)
+    if out.shape[0] != m:
+        out = out[:m]
+    return out.reshape(b, oh, ow, out.shape[-1])

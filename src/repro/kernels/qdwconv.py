@@ -21,8 +21,9 @@ I8_MIN, I8_MAX = -128, 127
 
 
 def _qdwconv_kernel(x_ref, w_ref, bias_ref, resc_ref, wsum_ref, coff_ref,
-                    zw_ref, out_ref, *, kh, kw, stride, lo, hi):
+                    zw_ref, out_ref, *, kh, kw, stride, lo, hi, c_true):
     sh, sw = stride
+    cc = pl.program_id(1)
     _, H, W, bc = x_ref.shape
     _, oh, ow, _ = out_ref.shape
     x = x_ref[...].astype(jnp.int32)          # (1, H, W, bc)
@@ -42,17 +43,24 @@ def _qdwconv_kernel(x_ref, w_ref, bias_ref, resc_ref, wsum_ref, coff_ref,
     inner = acc - zw_ref[...] * sum_x - wsum_ref[...] + coff_ref[...]
     y = bias_ref[...] + resc_ref[...] * inner.astype(jnp.float32)
     y = jnp.clip(y, lo, hi)
-    out_ref[...] = jnp.clip(jnp.round(y), I8_MIN, I8_MAX).astype(jnp.int8)
+    q = jnp.clip(jnp.round(y), I8_MIN, I8_MAX).astype(jnp.int8)
+    if c_true is not None:
+        # Padded-layout contract: channel lanes >= c_true are written as
+        # zero so downstream layers can consume the padded block unsliced.
+        lane = jax.lax.broadcasted_iota(jnp.int32, q.shape, 3) + cc * bc
+        q = jnp.where(lane < c_true, q, 0)
+    out_ref[...] = q
 
 
 @functools.partial(
-    jax.jit, static_argnames=("stride", "out_hw", "bc", "lo", "hi",
+    jax.jit, static_argnames=("stride", "out_hw", "bc", "lo", "hi", "c_true",
                               "interpret"))
 def qdwconv(x_q, w_q, bias_term, rescale, w_sum_zx, const_off, z_w,
-            *, stride, out_hw, bc=128, lo=-jnp.inf, hi=jnp.inf,
+            *, stride, out_hw, bc=128, lo=-jnp.inf, hi=jnp.inf, c_true=None,
             interpret=False):
     """x_q (B, H, W, C) int8 pre-padded, w_q (kh, kw, C) int8, consts (C,).
-    C % bc == 0 (ops wrapper pads channels)."""
+    C % bc == 0 (ops wrapper pads channels). ``c_true``: when set, output
+    lanes >= c_true are written as zero (padded-layout contract)."""
     b, H, W, c = x_q.shape
     kh, kw, _ = w_q.shape
     oh, ow = out_hw
@@ -69,7 +77,7 @@ def qdwconv(x_q, w_q, bias_term, rescale, w_sum_zx, const_off, z_w,
 
     return pl.pallas_call(
         functools.partial(_qdwconv_kernel, kh=kh, kw=kw, stride=stride,
-                          lo=lo, hi=hi),
+                          lo=lo, hi=hi, c_true=c_true),
         grid=(b, c // bc),
         in_specs=[
             pl.BlockSpec((1, H, W, bc), lambda n, cc: (n, 0, 0, cc)),

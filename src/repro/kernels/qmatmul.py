@@ -25,8 +25,10 @@ I8_MIN, I8_MAX = -128, 127
 
 
 def _qmatmul_kernel(x_ref, w_ref, bias_ref, resc_ref, wsum_ref, coff_ref,
-                    zw_ref, out_ref, acc_ref, sumx_ref, *, n_k, lo, hi):
+                    zw_ref, out_ref, acc_ref, sumx_ref, *, n_k, lo, hi,
+                    n_true):
     k = pl.program_id(2)
+    j = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
@@ -47,18 +49,28 @@ def _qmatmul_kernel(x_ref, w_ref, bias_ref, resc_ref, wsum_ref, coff_ref,
                  + coff_ref[...])                   # n z_X z_W  (folded)
         y = bias_ref[...] + resc_ref[...] * inner.astype(jnp.float32)
         y = jnp.clip(y, lo, hi)                     # fused activation
-        out_ref[...] = jnp.clip(jnp.round(y), I8_MIN, I8_MAX).astype(jnp.int8)
+        q = jnp.clip(jnp.round(y), I8_MIN, I8_MAX).astype(jnp.int8)
+        if n_true is not None:
+            # Padded-layout contract: lanes >= n_true carry ZERO, so the next
+            # layer's K-padding contributes nothing to its Σ X W or Σ X and
+            # activations can stay tile-resident across layers.
+            bm, bn = q.shape
+            col = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+            q = jnp.where(col < n_true, q, 0)
+        out_ref[...] = q
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "lo", "hi", "interpret"))
+    static_argnames=("bm", "bn", "bk", "lo", "hi", "n_true", "interpret"))
 def qmatmul(x_q, w_q, bias_term, rescale, w_sum_zx, const_off, z_w,
             *, bm=128, bn=128, bk=128, lo=-jnp.inf, hi=jnp.inf,
-            interpret=False):
+            n_true=None, interpret=False):
     """x_q (M, K) int8, w_q (K, N) int8, per-channel consts (N,) -> (M, N) int8.
 
     M, K, N must be multiples of the block sizes (ops.qmatmul_folded pads).
+    ``n_true``: when set, output lanes >= n_true are written as zero — the
+    padded-layout contract that lets chained layers skip the pad/slice pair.
     """
     m, k = x_q.shape
     k2, n = w_q.shape
@@ -76,7 +88,8 @@ def qmatmul(x_q, w_q, bias_term, rescale, w_sum_zx, const_off, z_w,
     const_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
 
     return pl.pallas_call(
-        functools.partial(_qmatmul_kernel, n_k=n_k, lo=lo, hi=hi),
+        functools.partial(_qmatmul_kernel, n_k=n_k, lo=lo, hi=hi,
+                          n_true=n_true),
         grid=(m // bm, n // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),

@@ -1,0 +1,31 @@
+"""Smoke test for the benchmark harness: runs the runtime bench in-process
+(--fast --only runtime) so the bench code can't silently rot, and checks the
+machine-readable BENCH_runtime.json contract."""
+import json
+import sys
+
+import pytest
+
+from benchmarks import run as bench_run
+
+
+@pytest.mark.slow
+def test_bench_runtime_fast_smoke(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(sys, "argv",
+                        ["benchmarks.run", "--fast", "--only", "runtime"])
+    bench_run.main()
+    out = capsys.readouterr().out
+
+    assert out.splitlines()[0] == "name,us_per_call,derived,backend"
+    assert "runtime/person_compiled_us" in out
+    # the flagship conv workload reports its compiled-pallas latency
+    assert "runtime/person_compiled_pallas_us" in out
+
+    doc = json.loads((tmp_path / "BENCH_runtime.json").read_text())
+    assert "runtime/person_compiled_pallas_us" in doc
+    for name, rec in doc.items():
+        assert name.startswith("runtime/")
+        assert isinstance(rec["median_us"], float)
+        assert rec["backend"]  # interpret-mode CPU numbers must say "cpu"
+        assert rec["ci95"] is None or len(rec["ci95"]) == 2

@@ -59,7 +59,7 @@ def test_qmatmul_property(seed, fused, zw):
     fc = _fc(*c, z_y=int(rng.integers(-20, 20)), s_y=0.03)
     out = np.asarray(kops.qmatmul_folded(jnp.asarray(x), jnp.asarray(w), fc,
                                          fused))
-    lo, hi = kops._bounds(fc, fused)
+    lo, hi = kops.clamp_bounds(fc, fused)
     ref = np.asarray(kref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), *c,
                                       lo=lo, hi=hi))
     np.testing.assert_array_equal(out, ref)

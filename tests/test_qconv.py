@@ -1,0 +1,153 @@
+"""Conv2D Pallas route: bit-exact parity vs the reference lowerings across
+strides, SAME/VALID padding, fused activations, and non-lane-multiple
+channel counts — kernel-level (synthetic folded consts, z_W != 0) and
+graph-level (real PTQ graphs, planned and unplanned layout)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompiledModel, Interpreter
+from repro.core import ops_ref as K
+from repro.core.builder import GraphBuilder
+from repro.core.ops_ref import FoldedConsts
+from repro.core.quantize import quantize_graph
+from repro.kernels import ops as kops
+from repro.kernels.qconv import im2col_q
+from repro.kernels.qmatmul import qmatmul as qmatmul_raw
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _consts(rng, n, z_w_val=0):
+    bias = (rng.normal(size=n) * 5).astype(np.float32)
+    resc = (rng.random(n) * 0.02 + 1e-4).astype(np.float32)
+    wsum = rng.integers(-5000, 5000, n).astype(np.int32)
+    coff = rng.integers(-100, 100, n).astype(np.int32)
+    zw = np.full(n, z_w_val, np.int32)
+    return bias, resc, wsum, coff, zw
+
+
+def _fc(bias, resc, wsum, coff, zw, z_y=0, s_y=0.05, z_x=0):
+    return FoldedConsts(bias, resc, wsum, coff, zw, np.int32(z_y),
+                        np.float32(s_y), np.int32(z_x))
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: qconv_folded vs the engine's jnp conv2d_folded oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw,cin,cout,kk,stride,padding", [
+    ((8, 8), 3, 5, 3, (1, 1), "SAME"),
+    ((9, 9), 3, 5, 3, (2, 2), "SAME"),      # odd extent, strided SAME
+    ((12, 10), 7, 13, 5, (2, 2), "VALID"),  # non-lane-multiple channels
+    ((6, 6), 1, 8, 1, (1, 1), "SAME"),      # pointwise (reshape fast path)
+    ((7, 7), 4, 6, 1, (2, 2), "VALID"),     # 1x1 strided (slice path)
+    ((96, 96), 1, 8, 3, (2, 2), "SAME"),    # person-detector first layer
+])
+def test_qconv_shapes(hw, cin, cout, kk, stride, padding):
+    rng = np.random.default_rng(cin * 100 + cout * 10 + kk)
+    x = rng.integers(-128, 128, (2, hw[0], hw[1], cin)).astype(np.int8)
+    f = rng.integers(-128, 128, (kk, kk, cin, cout)).astype(np.int8)
+    fc = _fc(*_consts(rng, cout, z_w_val=2), z_y=3, s_y=0.04, z_x=-5)
+    out = np.asarray(kops.qconv_folded(jnp.asarray(x), jnp.asarray(f), fc,
+                                       stride=stride, padding=padding,
+                                       fused="RELU"))
+    ref = np.asarray(K.conv2d_folded(jnp.asarray(x), jnp.asarray(f), fc,
+                                     stride=stride, padding=padding,
+                                     fused="RELU"))
+    np.testing.assert_array_equal(out, ref)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       fused=st.sampled_from(["NONE", "RELU", "RELU6"]),
+       padding=st.sampled_from(["SAME", "VALID"]),
+       zw=st.integers(-8, 8))
+def test_qconv_property(seed, fused, padding, zw):
+    rng = np.random.default_rng(seed)
+    h = int(rng.integers(5, 13))
+    w = int(rng.integers(5, 13))
+    cin = int(rng.integers(1, 9))
+    cout = int(rng.integers(1, 11))
+    kk = int(rng.choice([1, 3, 5]))
+    stride = (int(rng.choice([1, 2])),) * 2
+    if padding == "VALID" and (h < kk or w < kk):
+        return
+    x = rng.integers(-128, 128, (1, h, w, cin)).astype(np.int8)
+    f = rng.integers(-128, 128, (kk, kk, cin, cout)).astype(np.int8)
+    fc = _fc(*_consts(rng, cout, z_w_val=zw),
+             z_y=int(rng.integers(-20, 20)), s_y=0.03,
+             z_x=int(rng.integers(-10, 10)))
+    out = np.asarray(kops.qconv_folded(jnp.asarray(x), jnp.asarray(f), fc,
+                                       stride=stride, padding=padding,
+                                       fused=fused))
+    ref = np.asarray(K.conv2d_folded(jnp.asarray(x), jnp.asarray(f), fc,
+                                     stride=stride, padding=padding,
+                                     fused=fused))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_im2col_layout_matches_filter_flatten():
+    """Patch rows are tap-major/channel-minor — exactly filter.reshape's
+    row order, so mat @ f.reshape(K, cout) is the conv."""
+    rng = np.random.default_rng(7)
+    x = rng.integers(-128, 128, (1, 4, 4, 3)).astype(np.int32)
+    mat, (b, oh, ow) = im2col_q(jnp.asarray(x), 3, 3, (1, 1))
+    assert (b, oh, ow) == (1, 2, 2) and mat.shape == (4, 27)
+    row0 = np.asarray(mat)[0]
+    expect = x[0, 0:3, 0:3, :].reshape(-1)  # (i, j, c) with c fastest
+    np.testing.assert_array_equal(row0, expect)
+
+
+def test_qmatmul_n_true_zeroes_padding_lanes():
+    """The padded-layout contract: lanes >= n_true come back as ZERO, which
+    is what makes chained padded layers exact (zero K-padding contributes
+    nothing to the next layer's Sigma XW or Sigma X)."""
+    rng = np.random.default_rng(3)
+    x = rng.integers(-128, 128, (128, 128)).astype(np.int8)
+    w = rng.integers(-128, 128, (128, 128)).astype(np.int8)
+    c = _consts(rng, 128, z_w_val=1)
+    full = np.asarray(qmatmul_raw(jnp.asarray(x), jnp.asarray(w),
+                                  *(jnp.asarray(v) for v in c),
+                                  interpret=True))
+    masked = np.asarray(qmatmul_raw(jnp.asarray(x), jnp.asarray(w),
+                                    *(jnp.asarray(v) for v in c),
+                                    n_true=37, interpret=True))
+    np.testing.assert_array_equal(masked[:, :37], full[:, :37])
+    assert not masked[:, 37:].any()
+
+
+# ---------------------------------------------------------------------------
+# Graph level: real PTQ conv graphs through the pallas route (planned and
+# unplanned layout) vs the interpreter's eval_reference path
+# ---------------------------------------------------------------------------
+
+def _conv_graph(rng, hw, cin, cout, kk, stride, padding, fused):
+    b = GraphBuilder("conv")
+    x = b.input("x", (1, hw[0], hw[1], cin))
+    h = b.conv2d(x, rng.normal(0, 0.4, (kk, kk, cin, cout)).astype("f"),
+                 rng.normal(size=cout).astype("f"), stride=stride,
+                 padding=padding, fused=fused)
+    b.output(h)
+    return b.build()
+
+
+@pytest.mark.parametrize("hw,cin,cout,kk,stride,padding,fused", [
+    ((9, 9), 3, 5, 3, (2, 2), "SAME", "RELU6"),
+    ((8, 8), 4, 9, 3, (1, 1), "VALID", "RELU"),
+    ((10, 10), 5, 3, 1, (1, 1), "SAME", "NONE"),
+])
+def test_conv_pallas_graph_parity(hw, cin, cout, kk, stride, padding, fused):
+    rng = np.random.default_rng(hw[0] * 31 + cout)
+    g = _conv_graph(rng, hw, cin, cout, kk, stride, padding, fused)
+    shape = (1, hw[0], hw[1], cin)
+    qg = quantize_graph(g, [rng.normal(size=shape).astype("f")
+                            for _ in range(4)])
+    x = rng.normal(size=shape).astype("f")
+    ref = np.asarray(Interpreter(qg).invoke(x))
+    planned = np.asarray(CompiledModel(qg, use_pallas=True).predict(x))
+    percall = np.asarray(CompiledModel(qg, use_pallas=True,
+                                       layout_plan=False).predict(x))
+    np.testing.assert_array_equal(ref, planned)
+    np.testing.assert_array_equal(ref, percall)

@@ -103,6 +103,35 @@ def test_compiled_matches_reference_int8(op):
     np.testing.assert_array_equal(a, b)
 
 
+_PALLAS_OPS = [name for name in G.ALL_OPS
+               if R.get(name).lower_pallas is not None]
+
+
+def test_conv2d_has_pallas_route():
+    """The paper's flagship workload is conv-dominated — the MXU route must
+    cover CONV_2D, not just FC and depthwise."""
+    assert G.CONV_2D in _PALLAS_OPS
+
+
+@pytest.mark.parametrize("layout_plan", [True, False],
+                         ids=["planned", "per-call"])
+@pytest.mark.parametrize("op", [G.FULLY_CONNECTED, G.CONV_2D,
+                                G.DEPTHWISE_CONV_2D])
+def test_pallas_matches_reference_int8(op, layout_plan):
+    """The MXU routes (graph-planned padded layout AND the per-call
+    pad/slice route) keep the bit-exact compiled-vs-reference contract."""
+    assert op in _PALLAS_OPS
+    rng = np.random.default_rng(zlib.crc32(op.encode()) + 7)
+    g, shape = _graph_for(op, rng)
+    qg = quantize_graph(g, [rng.normal(size=shape).astype("f")
+                            for _ in range(4)])
+    x = rng.normal(size=shape).astype("f")
+    a = np.asarray(Interpreter(qg).invoke(x))
+    b = np.asarray(CompiledModel(qg, use_pallas=True,
+                                 layout_plan=layout_plan).predict(x))
+    np.testing.assert_array_equal(a, b)
+
+
 @pytest.mark.parametrize("op", G.ALL_OPS)
 def test_compiled_matches_reference_float(op):
     rng = np.random.default_rng(zlib.crc32(op.encode()) + 1)
