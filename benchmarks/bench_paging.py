@@ -59,7 +59,8 @@ def main(fast: bool = False):
         peak = plan_paged(qg, {0: n_pages}).peak_bytes
         lines.append(csv_line(
             f"paging/fc256_pages{n_pages}_us", us,
-            f"plan_peak_B={peak};slowdown={us/us0:.2f}x"))
+            f"plan_peak_B={peak};slowdown={us/us0:.2f}x",
+            ratio=us / us0))
     return lines
 
 

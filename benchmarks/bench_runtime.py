@@ -33,8 +33,8 @@ def main(fast: bool = False):
             lambda: np.asarray(cm.predict_q(qx)), iters=iters)
         lines.append(csv_line(f"runtime/{name}_compiled_us", us_c,
                               f"ci95=({lo:.0f};{hi:.0f})", ci=(lo, hi)))
-        lines.append(csv_line(f"runtime/{name}_speedup", 0.0,
-                              f"{us_i/us_c:.2f}x"))
+        lines.append(csv_line(f"runtime/{name}_speedup", None,
+                              f"{us_i/us_c:.2f}x", ratio=us_i / us_c))
 
         # Pallas/MXU route with the compile-time padded-layout plan. The
         # person model is the paper's flagship conv workload, so it is
@@ -52,14 +52,18 @@ def main(fast: bool = False):
                 f"planned layout; {mode}", ci=(lo, hi)))
 
         # Batched serving: amortize dispatch over B requests in one call.
+        # The record name is batch-size-independent (batch goes in the
+        # derived column) so fast and full runs emit the same name set —
+        # tools/check.sh diffs names across runs.
         batch = 8 if fast else 32
         qxb = np.broadcast_to(qx, (batch,) + qx.shape).copy()
         cm.compile_batched(batch)  # exclude bucket compilation from timing
         us_b, lo, hi = median_time_us(
             lambda: np.asarray(cm.predict_q(qxb)), iters=iters)
         lines.append(csv_line(
-            f"runtime/{name}_compiled_batch{batch}_per_req_us",
-            us_b / batch, f"batch call {us_b:.0f}us ci95=({lo:.0f};{hi:.0f})",
+            f"runtime/{name}_compiled_batch_per_req_us",
+            us_b / batch,
+            f"batch={batch} call {us_b:.0f}us ci95=({lo:.0f};{hi:.0f})",
             ci=(lo / batch, hi / batch)))
     return lines
 

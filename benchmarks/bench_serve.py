@@ -1,0 +1,168 @@
+"""Serving-layer benchmark: dynamic micro-batching vs serial batch-1.
+
+Three measurements on the sine model (the paper's smallest graph — the one
+where per-request dispatch overhead dominates, i.e. where batching has to
+do the work):
+
+* ``serve/sine_engine_serial_us`` — tight-loop ``predict_q`` batch-1, no
+  serving stack: the engine's single-request floor, recorded for context.
+* ``serve/sine_serial_us`` — serial batch-1 **serving**: the same closed
+  loop of concurrent clients through the same MicroBatcher stack, but with
+  ``max_batch=1`` — dynamic batching switched off, everything else equal.
+* ``serve/sine_dynamic_per_req_us`` + ``serve/sine_dynamic_vs_serial`` —
+  the same closed loop with batching on; the ratio record is the headline:
+  how much throughput dynamic batching buys at equal offered load, with
+  both sides paying the identical scheduling/queueing costs (so the ratio
+  isolates batching rather than asyncio overhead vs a bare numpy loop).
+* ``serve/sine_poisson_x{1,2,4}_p95_us`` — open-loop Poisson arrivals at
+  1x / 2x / 4x serial serving capacity: achieved throughput, p95 latency
+  (flush-deadline bound), and how many requests the bounded queue shed.
+  Names are identical in --fast and full runs so tools/check.sh can diff
+  name sets across runs.
+
+All records land in BENCH_runtime.json via benchmarks.run.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from repro.core import CompiledModel
+from repro.core.quantize import quantize_graph
+from repro.configs.paper_models import build_sine
+from repro.serve.metrics import ModelMetrics
+from repro.serve.scheduler import Clock, MicroBatcher, QueueFullError
+
+from .common import csv_line
+
+MAX_BATCH = 128   # engine cost/req: ~17us @64 -> ~7us @128 on CPU
+MAX_DELAY_S = 0.002
+MAX_QUEUE = 4 * MAX_BATCH
+
+
+def _sine_model():
+    rng = np.random.default_rng(0)
+    qg = quantize_graph(
+        build_sine(),
+        [rng.uniform(0, 2 * np.pi, (1, 1)).astype("f") for _ in range(8)])
+    cm = CompiledModel(qg)
+    qp = qg.tensor(qg.inputs[0]).qparams
+    qxs = [np.asarray(qp.quantize(
+        rng.uniform(0, 2 * np.pi, (1, 1)).astype("f"))) for _ in range(64)]
+    return cm, qxs
+
+
+def _serial_rps(cm, qxs, n: int) -> float:
+    cm.compile()
+    for x in qxs[:8]:  # warmup
+        np.asarray(cm.predict_q(x))
+    t0 = time.perf_counter()
+    for i in range(n):
+        np.asarray(cm.predict_q(qxs[i % len(qxs)]))
+    return n / (time.perf_counter() - t0)
+
+
+def _batcher(cm, max_batch: int = MAX_BATCH) -> MicroBatcher:
+    clock = Clock()
+    return MicroBatcher.for_model(
+        cm, name="sine", max_batch=max_batch, max_delay_s=MAX_DELAY_S,
+        max_queue=MAX_QUEUE, clock=clock,
+        metrics=ModelMetrics(now=clock.now()))
+
+
+async def _closed_loop(b: MicroBatcher, qxs, n: int, clients: int) -> float:
+    """``clients`` concurrent closed-loop clients, ``n`` requests total:
+    each client fires its next request when the previous one completes, so
+    offered load always matches service capacity."""
+    per = n // clients
+
+    async def client(cid: int):
+        for i in range(per):
+            await b.infer(qxs[(cid + i) % len(qxs)])
+
+    async with b:
+        t0 = time.perf_counter()
+        await asyncio.gather(*(client(c) for c in range(clients)))
+        elapsed = time.perf_counter() - t0
+    return (per * clients) / elapsed
+
+
+async def _open_loop(b: MicroBatcher, qxs, rate_rps: float, n: int,
+                     seed: int = 0) -> dict:
+    """Open-loop Poisson load: arrival times are the cumulative sum of
+    exponential gaps at ``rate_rps``, anchored to the wall clock —
+    submissions never wait for completions, and when the event loop falls
+    behind (sleep granularity, a long flush) every already-due arrival is
+    submitted immediately, so the offered rate holds under drift. Returns
+    achieved throughput, p95 latency, and how much the bounded queue shed.
+    """
+    rng = np.random.default_rng(seed)
+    sched = np.cumsum(rng.exponential(1.0 / rate_rps, n))
+    shed = 0
+    futs = []
+    async with b:
+        t0 = time.perf_counter()
+        for i in range(n):
+            delay = t0 + sched[i] - time.perf_counter()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            try:
+                futs.append(b.submit(qxs[i % len(qxs)]))
+            except QueueFullError:
+                shed += 1
+        if futs:
+            await asyncio.gather(*futs)
+        elapsed = time.perf_counter() - t0
+    snap = b.metrics.snapshot(b.clock.now())
+    return {"offered_rps": rate_rps, "achieved_rps": len(futs) / elapsed,
+            "shed": shed, "p95_us": (snap["p95_ms"] or 0.0) * 1e3,
+            "occupancy": snap["batch_occupancy"]}
+
+
+def main(fast: bool = False):
+    lines = []
+    cm, qxs = _sine_model()
+
+    n_engine = 256 if fast else 1024
+    engine_rps = _serial_rps(cm, qxs, n_engine)
+    lines.append(csv_line("serve/sine_engine_serial_us", 1e6 / engine_rps,
+                          f"tight-loop predict_q floor rps={engine_rps:.0f} "
+                          f"n={n_engine}"))
+
+    clients = 2 * MAX_BATCH
+    n_serial = 512 if fast else 2048
+    serial_rps = asyncio.run(_closed_loop(_batcher(cm, max_batch=1), qxs,
+                                          n_serial, clients=clients))
+    lines.append(csv_line("serve/sine_serial_us", 1e6 / serial_rps,
+                          f"batch-1 serving rps={serial_rps:.0f} "
+                          f"n={n_serial}"))
+
+    n_closed = 2048 if fast else 8192
+    dyn_rps = asyncio.run(_closed_loop(_batcher(cm), qxs, n_closed,
+                                       clients=clients))
+    lines.append(csv_line("serve/sine_dynamic_per_req_us", 1e6 / dyn_rps,
+                          f"rps={dyn_rps:.0f} n={n_closed}"))
+    lines.append(csv_line("serve/sine_dynamic_vs_serial", None,
+                          f"{dyn_rps / serial_rps:.2f}x dynamic batching "
+                          f"vs serial batch-1 serving, equal offered load",
+                          ratio=dyn_rps / serial_rps))
+
+    # Open-loop Poisson sweep: offered load as multiples of serial serving
+    # capacity. At 4x, only dynamic batching can keep up; the bounded
+    # queue sheds whatever the engine can't absorb.
+    n_open = 400 if fast else 2000
+    for mult in (1, 2, 4):
+        res = asyncio.run(_open_loop(_batcher(cm), qxs,
+                                     mult * serial_rps, n_open, seed=mult))
+        lines.append(csv_line(
+            f"serve/sine_poisson_x{mult}_p95_us", res["p95_us"],
+            f"offered={res['offered_rps']:.0f}rps "
+            f"achieved={res['achieved_rps']:.0f}rps shed={res['shed']} "
+            f"occupancy={0.0 if res['occupancy'] is None else res['occupancy']:.2f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

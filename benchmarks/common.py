@@ -31,17 +31,30 @@ def median_time_us(fn, iters: int = 100, warmup: int = 3):
         float(np.percentile(ts, 97.5))
 
 
-def csv_line(name: str, us: float, derived: str = "", ci=None) -> str:
+def csv_line(name: str, us=None, derived: str = "", ci=None,
+             ratio=None) -> str:
     """Print one CSV line and keep a structured record of it.
 
-    The trailing column records ``jax.default_backend()`` so interpret-mode
-    Pallas numbers (CPU) can't be mistaken for TPU perf."""
+    ``us`` is the record's timing (``median_us``); pass ``None`` for
+    records that carry no timing. ``ratio`` is for derived dimensionless
+    values (speedups, slowdowns, throughput ratios) — they land in a
+    dedicated field instead of masquerading as a 0.0 µs timing.
+
+    Every record also captures ``jax.default_backend()`` and whether the
+    Pallas kernels run in interpret mode (CPU fallback), so committed
+    pallas-vs-compiled numbers are interpretable across backends."""
+    from repro.kernels.ops import interpret_mode
     backend = jax.default_backend()
-    line = f"{name},{us:.2f},{derived},{backend}"
+    us_col = "" if us is None else f"{us:.2f}"
+    line = f"{name},{us_col},{derived},{backend}"
     print(line)
-    RECORDS.append({"name": name, "median_us": float(us),
+    RECORDS.append({"name": name,
+                    "median_us": None if us is None else float(us),
                     "ci95": None if ci is None else [float(c) for c in ci],
-                    "backend": backend, "derived": derived})
+                    "ratio": None if ratio is None else float(ratio),
+                    "backend": backend,
+                    "pallas_interpret": interpret_mode(),
+                    "derived": derived})
     return line
 
 

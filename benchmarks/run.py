@@ -3,10 +3,11 @@
   PYTHONPATH=src python -m benchmarks.run [--fast]
 
 Prints ``name,us_per_call,derived,backend`` CSV lines. When the runtime
-bench runs, a machine-readable ``BENCH_runtime.json`` (name ->
-median_us/ci95/backend) is written alongside the CSV so the perf trajectory
-is trackable across PRs. The roofline benchmark (which spawns 512-device
-compiles) runs standalone:
+and/or serve benches run, a machine-readable ``BENCH_runtime.json``
+(name -> median_us/ci95/ratio/backend/pallas_interpret) is written
+alongside the CSV so the perf trajectory is trackable across PRs
+(``tools/check_bench.py`` gates on its name set). The roofline benchmark
+(which spawns 512-device compiles) runs standalone:
   PYTHONPATH=src python -m benchmarks.bench_roofline
 run.py includes its cached table when present.
 """
@@ -30,13 +31,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_memory, bench_runtime,
-                            bench_paging, bench_energy, common)
+                            bench_paging, bench_energy, bench_serve, common)
     benches = {
         "accuracy": bench_accuracy.main,   # Table 5
         "memory": bench_memory.main,       # Figs. 9/10
         "runtime": bench_runtime.main,     # Fig. 11
         "paging": bench_paging.main,       # Sec. 4.3 / Fig. 6
         "energy": bench_energy.main,       # Table 6 (derived)
+        "serve": bench_serve.main,         # dynamic batching vs serial
     }
     del common.RECORDS[:]
     print("name,us_per_call,derived,backend")
@@ -51,10 +53,27 @@ def main() -> None:
         print(f"# bench {name} done in {time.time()-t0:.1f}s",
               file=sys.stderr)
 
-    if "runtime" in ran:
-        doc = {r["name"]: {"median_us": r["median_us"], "ci95": r["ci95"],
-                           "backend": r["backend"]}
-               for r in common.RECORDS if r["name"].startswith("runtime/")}
+    json_prefixes = tuple(p for p in ("runtime/", "serve/")
+                          if p.rstrip("/") in ran)
+    if json_prefixes:
+        # Merge into an existing file: a partial run (--only runtime/serve)
+        # refreshes only its own record family and preserves the others, so
+        # iterating with --only can never truncate the committed baseline
+        # that tools/check_bench.py gates on.
+        doc = {}
+        if os.path.exists(args.json_out):
+            try:
+                with open(args.json_out) as f:
+                    doc = {k: v for k, v in json.load(f).items()
+                           if not k.startswith(json_prefixes)}
+            except (ValueError, OSError):
+                doc = {}
+        doc.update({r["name"]: {"median_us": r["median_us"],
+                                "ci95": r["ci95"], "ratio": r["ratio"],
+                                "backend": r["backend"],
+                                "pallas_interpret": r["pallas_interpret"]}
+                    for r in common.RECORDS
+                    if r["name"].startswith(json_prefixes)})
         with open(args.json_out, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -2,5 +2,5 @@
 compile-time folding, interpreter baseline, AOT compiled engine, static
 memory planning, paging."""
 from . import graph, builder, quantize, ops_ref, preprocess, memory, paging  # noqa: F401
-from .engine import CompiledModel, build_graph_fn  # noqa: F401
+from .engine import CompiledModel, build_graph_fn, bucket_for  # noqa: F401
 from .interpreter import Interpreter  # noqa: F401

@@ -89,9 +89,12 @@ def build_graph_fn(g: G.Graph, folded: dict, use_pallas: bool = False,
     return fn
 
 
-def _bucket(batch: int) -> int:
+def bucket_for(batch: int) -> int:
     """Power-of-two shape bucket: one AOT executable serves all batch sizes
-    up to the bucket (inputs are zero-padded, outputs sliced)."""
+    up to the bucket (inputs are zero-padded, outputs sliced).
+
+    Public so the serving layer (``repro.serve.scheduler``) can coalesce
+    request queues into exactly the buckets the engine AOT-compiles."""
     return 1 << max(0, int(batch - 1).bit_length())
 
 
@@ -134,7 +137,7 @@ class CompiledModel:
         batched path always stages fresh device buffers (see
         ``_predict_q_batched``), so donation is safe and lets XLA reuse the
         int8 input storage for activations."""
-        bucket = _bucket(batch)
+        bucket = bucket_for(batch)
         exe = self._batched_aot.get(bucket)
         if exe is None:
             donate = (tuple(range(len(self.graph.inputs)))
@@ -146,6 +149,34 @@ class CompiledModel:
             exe = fn.lower(*self._input_specs(lead=(bucket,))).compile()
             self._batched_aot[bucket] = exe
         return exe
+
+    def bucket_sizes(self) -> tuple:
+        """Batch buckets with a compiled-and-cached AOT executable, sorted.
+        The serving scheduler warms these up front so no request pays a
+        compile on the hot path."""
+        return tuple(sorted(self._batched_aot))
+
+    def warmup_batched(self, max_batch: int):
+        """Ahead-of-serving warm-up: AOT-compile every power-of-two bucket
+        up to ``max_batch``'s bucket AND the device-side bucket-fill pad
+        stage for every batch size below it. After this, no batch size
+        ``<= max_batch`` triggers any compilation at request time — the
+        serving-path analogue of the paper's everything-at-compile-time
+        rule."""
+        top = bucket_for(max_batch)
+        b = 1
+        while b <= top:
+            self.compile_batched(b)
+            b *= 2
+        for tid in self.graph.inputs:
+            t = self.graph.tensor(tid)
+            for batch in range(1, top):
+                pad = bucket_for(batch) - batch
+                if pad:
+                    shape = (batch,) + t.shape
+                    self._bucket_pad(shape, pad)(
+                        jnp.zeros(shape, np.dtype(t.dtype)))
+        return self
 
     @property
     def executable(self):
@@ -184,7 +215,7 @@ class CompiledModel:
 
     def _predict_q_batched(self, inputs):
         batch = np.asarray(inputs[0]).shape[0]
-        bucket = _bucket(batch)
+        bucket = bucket_for(batch)
         args = []
         for tid, arr in zip(self.graph.inputs, inputs):
             t = self.graph.tensor(tid)
@@ -209,6 +240,32 @@ class CompiledModel:
             t = self.graph.tensor(tid)
             args.append(jnp.asarray(np.asarray(arr, t.dtype).reshape(t.shape)))
         outs = self.executable(*args) if self._aot is not None else self._fn(*args)
+        return outs if len(outs) > 1 else outs[0]
+
+    def predict_q_many(self, *inputs, max_batch: Optional[int] = None):
+        """Batched ``predict_q`` that splits an arbitrarily large batch into
+        chunks of at most ``max_batch`` rows (each routed through its
+        power-of-two bucket) and concatenates the results.
+
+        This is the serving entry point: a micro-batcher can drain its whole
+        queue in one call without AOT-compiling a bucket for every queue
+        depth it ever observes — the executable working set stays bounded by
+        ``max_batch``. Rows are identical to per-chunk ``predict_q`` calls.
+        """
+        arrs = [np.asarray(a) for a in inputs]
+        if not self._is_batched(arrs[0]):
+            raise ValueError("predict_q_many requires a leading batch dim")
+        batch = arrs[0].shape[0]
+        if max_batch is None or batch <= max_batch:
+            return self.predict_q(*arrs)
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        chunks = []
+        for lo in range(0, batch, max_batch):
+            out = self.predict_q(*(a[lo:lo + max_batch] for a in arrs))
+            chunks.append(out if isinstance(out, tuple) else (out,))
+        outs = tuple(np.concatenate([np.asarray(c[i]) for c in chunks])
+                     for i in range(len(chunks[0])))
         return outs if len(outs) > 1 else outs[0]
 
     def predict(self, *inputs):

@@ -37,6 +37,14 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def interpret_mode() -> bool:
+    """True when the Pallas kernels execute with ``interpret=True`` (the
+    CPU validation fallback) rather than compiling to Mosaic. Benchmarks
+    record this per measurement so committed pallas numbers are
+    interpretable across backends."""
+    return _interpret()
+
+
 def _pad2(a, m0, m1, value=0):
     p0 = round_up(a.shape[0], m0) - a.shape[0]
     p1 = round_up(a.shape[1], m1) - a.shape[1]

@@ -1,0 +1,97 @@
+"""Per-model serving counters: latency percentiles, throughput, batch
+occupancy.
+
+The serving-scale analogue of the paper's static-memory discipline applies
+here too: every structure is bounded up front (a fixed-capacity latency
+window, scalar counters), so metrics collection itself cannot grow RSS under
+sustained load. Snapshots are plain dicts, cheap enough to take per flush.
+
+All timestamps come from the owner's clock (``repro.serve.scheduler.Clock``)
+so the deterministic fake-clock tests pin percentile and throughput math
+exactly — no wall-clock reads hide in here.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+
+class ModelMetrics:
+    """Counters for one served model.
+
+    * ``submitted / completed / rejected / failed`` — request accounting;
+      ``rejected`` counts admissions shed by the bounded queue
+      (backpressure), the load the system refused rather than buffered;
+      ``failed`` counts admitted requests that reached a terminal state
+      without a result (batch inference error, caller cancellation,
+      non-drain close) so the ``inflight`` gauge cannot drift.
+    * ``batches / batched_rows / bucket_rows`` — flush accounting;
+      ``batched_rows / bucket_rows`` is batch occupancy, the fraction of
+      bucket slots carrying real requests (1.0 = every AOT-compiled slot
+      did useful work; low values mean the deadline, not the bucket, is
+      flushing).
+    * latency window — the last ``window`` end-to-end request latencies
+      (enqueue -> result set), a bounded reservoir for p50/p95/p99.
+    """
+
+    def __init__(self, now: float = 0.0, window: int = 4096):
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0
+        self.failed = 0
+        self.batches = 0
+        self.batched_rows = 0
+        self.bucket_rows = 0
+        self.infer_s = 0.0
+        self._lat = deque(maxlen=window)
+        self._t0 = float(now)
+
+    # -- observation hooks (called by the scheduler) ----------------------
+    def observe_submit(self):
+        self.submitted += 1
+
+    def observe_reject(self):
+        self.rejected += 1
+
+    def observe_fail(self):
+        self.failed += 1
+
+    def observe_batch(self, rows: int, bucket: int, infer_s: float):
+        self.batches += 1
+        self.batched_rows += rows
+        self.bucket_rows += bucket
+        self.infer_s += float(infer_s)
+
+    def observe_done(self, latency_s: float):
+        self.completed += 1
+        self._lat.append(float(latency_s))
+
+    # -- reporting --------------------------------------------------------
+    def latency_percentiles(self, ps=(50, 95, 99)) -> dict:
+        if not self._lat:
+            return {f"p{p}_ms": None for p in ps}
+        lat = np.asarray(self._lat, np.float64) * 1e3
+        return {f"p{p}_ms": float(np.percentile(lat, p)) for p in ps}
+
+    def snapshot(self, now: float) -> dict:
+        elapsed = max(float(now) - self._t0, 1e-12)
+        snap = {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "failed": self.failed,
+            # submitted counts admitted requests only (rejects raise before
+            # enqueue), so rejected is NOT part of the inflight balance
+            "inflight": self.submitted - self.completed - self.failed,
+            "batches": self.batches,
+            "throughput_rps": self.completed / elapsed,
+            "mean_batch": (self.batched_rows / self.batches
+                           if self.batches else None),
+            "batch_occupancy": (self.batched_rows / self.bucket_rows
+                                if self.bucket_rows else None),
+            "infer_s": self.infer_s,
+            "elapsed_s": elapsed,
+        }
+        snap.update(self.latency_percentiles())
+        return snap

@@ -1,0 +1,164 @@
+"""Multi-model serving registry for the compiled TinyML engine.
+
+One process serves several compiled models (the paper's sine / speech /
+person trio by default), each behind its own
+:class:`repro.serve.scheduler.MicroBatcher`:
+
+* **Warm-up compilation** — ``register`` builds the ``CompiledModel`` and
+  AOT-compiles the batch-1 executable plus every power-of-two bucket up to
+  the model's ``max_batch``, so the first request is as fast as the
+  millionth (all compilation ahead of serving, the MicroFlow discipline
+  applied to the fleet).
+* **Admission control** — ``infer`` rejects unknown models (``KeyError``)
+  and, once a model's bounded queue is full, sheds the request with
+  :class:`QueueFullError` rather than buffering it. Together with the
+  engine's static buffers this keeps resident memory flat under overload.
+* **Metrics** — per-model :class:`repro.serve.metrics.ModelMetrics`
+  snapshots (p50/p95/p99 latency, throughput, batch occupancy) via
+  :meth:`snapshot`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import CompiledModel
+from .metrics import ModelMetrics
+from .scheduler import Clock, MicroBatcher, QueueFullError  # noqa: F401
+
+
+@dataclasses.dataclass
+class _Entry:
+    name: str
+    model: CompiledModel
+    batcher: MicroBatcher
+
+
+class ServingRegistry:
+    """Named compiled models, each behind a dynamic micro-batcher."""
+
+    def __init__(self, *, clock: Optional[Clock] = None, max_batch: int = 32,
+                 max_delay_s: float = 0.002, max_queue: int = 256):
+        self.clock = clock or Clock()
+        self._defaults = dict(max_batch=max_batch, max_delay_s=max_delay_s,
+                              max_queue=max_queue)
+        self._entries: dict = {}
+        self._started = False
+        self._stopped = False
+
+    # -- registration / lifecycle ----------------------------------------
+    def register(self, name: str, model: CompiledModel, *,
+                 warmup: bool = True, **overrides) -> CompiledModel:
+        """Admit ``model`` (an int8 ``CompiledModel``) under ``name``.
+        ``overrides`` replace the registry-level batcher defaults
+        (``max_batch`` / ``max_delay_s`` / ``max_queue``) for this model."""
+        if name in self._entries:
+            raise ValueError(f"model {name!r} already registered")
+        kw = {**self._defaults, **overrides}
+        batcher = MicroBatcher.for_model(
+            model, warmup=warmup, name=name, clock=self.clock,
+            metrics=ModelMetrics(now=self.clock.now()), **kw)
+        self._entries[name] = _Entry(name, model, batcher)
+        if self._started:  # late registration joins a running registry
+            batcher.start()
+        return model
+
+    def models(self) -> tuple:
+        return tuple(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def start(self) -> "ServingRegistry":
+        if self._stopped:
+            raise RuntimeError("registry is stopped (stop() is terminal); "
+                               "build a new ServingRegistry")
+        for e in self._entries.values():
+            e.batcher.start()
+        self._started = True
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        """Terminal: drains (or cancels) every batcher and shuts the
+        registry down for good — serving again means building a new
+        registry (warm-ups are per-``CompiledModel``, so the models
+        themselves can be re-registered cheaply)."""
+        for e in self._entries.values():
+            await e.batcher.close(drain=drain)
+        self._started = False
+        self._stopped = True
+
+    async def __aenter__(self):
+        return self.start()
+
+    async def __aexit__(self, *exc):
+        await self.stop()
+
+    # -- serving ----------------------------------------------------------
+    def _entry(self, name: str) -> _Entry:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(f"unknown model {name!r}; "
+                           f"registered: {sorted(self._entries)}") from None
+
+    def submit(self, name: str, x):
+        """Admission-controlled enqueue; returns the request's future.
+        Raises ``KeyError`` for unregistered models, ``QueueFullError``
+        when the model's bounded queue sheds the request."""
+        if not self._started:
+            raise RuntimeError("registry not started (use `async with` "
+                               "or call start())")
+        return self._entry(name).batcher.submit(x)
+
+    async def infer(self, name: str, x):
+        return await self.submit(name, x)
+
+    # -- dtype helpers (requests travel in graph dtype) --------------------
+    def quantize_input(self, name: str, x):
+        """Float sample -> graph-dtype sample for ``submit``/``infer``."""
+        g = self._entry(name).model.graph
+        t = g.tensor(g.inputs[0])
+        x = np.asarray(x, np.float32).reshape(t.shape)
+        return np.asarray(t.qparams.quantize(x)) if t.dtype == "int8" else x
+
+    def dequantize_output(self, name: str, y):
+        g = self._entry(name).model.graph
+        t = g.tensor(g.outputs[0])
+        y = np.asarray(y)
+        return (t.qparams.dequantize(y) if t.dtype == "int8"
+                else y.astype(np.float32))
+
+    # -- observability -----------------------------------------------------
+    def metrics(self, name: str) -> ModelMetrics:
+        return self._entry(name).batcher.metrics
+
+    def snapshot(self) -> dict:
+        """{model: metrics snapshot} for every registered model."""
+        now = self.clock.now()
+        return {e.name: e.batcher.metrics.snapshot(now)
+                for e in self._entries.values()}
+
+
+def build_paper_registry(names=("sine", "speech", "person"), *,
+                         calib_samples: int = 8, seed: int = 0,
+                         **registry_kw) -> ServingRegistry:
+    """Registry serving the paper's models (Table 3), quantized with
+    calibrated-random representative data exactly as the benchmarks do."""
+    from repro.configs.paper_models import PAPER_MODELS
+    from repro.core.quantize import quantize_graph
+
+    gens = {
+        "sine": lambda rng, n: rng.uniform(0, 2 * np.pi, (n, 1)).astype("f"),
+        "speech": lambda rng, n: rng.normal(0, 1, (n, 49, 40, 1)).astype("f"),
+        "person": lambda rng, n: rng.normal(0, 1, (n, 96, 96, 1)).astype("f"),
+    }
+    reg = ServingRegistry(**registry_kw)
+    rng = np.random.default_rng(seed)
+    for name in names:
+        g = PAPER_MODELS[name](batch=1)
+        rep = [gens[name](rng, 1) for _ in range(calib_samples)]
+        reg.register(name, CompiledModel(quantize_graph(g, rep)))
+    return reg

@@ -1,0 +1,276 @@
+"""Dynamic micro-batching scheduler for the compiled TinyML engine.
+
+MicroFlow wins by moving everything expensive to compile time; the engine's
+batched path (PR 1) extends that to serving — one AOT executable per
+power-of-two batch bucket. What's missing between "a stream of independent
+single-sample requests" and "large batches that make those executables pay
+off" is a scheduler. This module provides it:
+
+* ``MicroBatcher`` — an asyncio request queue with a deadline-driven
+  coalescer. Requests accumulate until either (a) the queue reaches
+  ``max_batch`` (bucket-full flush: the batch exactly fills the largest
+  warmed bucket) or (b) the oldest request has waited ``max_delay_s``
+  (deadline flush: bounded p95 even at low load). A flush drains up to
+  ``max_batch`` requests, stacks them into one device call through
+  ``CompiledModel.predict_q_many`` (which splits oversized drains across
+  buckets), and distributes rows back to per-request futures.
+* Backpressure: the queue is bounded by ``max_queue``. When full,
+  ``submit`` raises :class:`QueueFullError` instead of buffering — load is
+  shed at admission, so resident memory stays static under any offered
+  load. This is the serving-scale analogue of the paper's static-memory
+  guarantee (Sec. 4.1): no structure in the serving path grows with load.
+* ``Clock`` / ``FakeClock`` — every time read and every timed wait goes
+  through an injected clock, so tests drive the batcher deterministically
+  (virtual time, zero real sleeps) while production uses the monotonic
+  wall clock.
+
+The batcher serves single-input / single-output graphs (all three paper
+models); requests are single samples of the graph's input shape.
+"""
+from __future__ import annotations
+
+import asyncio
+import contextlib
+import heapq
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.engine import bucket_for
+from .metrics import ModelMetrics
+
+
+class QueueFullError(RuntimeError):
+    """Admission refused: the bounded request queue is at capacity.
+
+    Raised synchronously from ``submit`` — the caller (or the load
+    balancer above it) decides whether to retry, degrade, or drop.
+    """
+
+    def __init__(self, name: str, depth: int):
+        super().__init__(f"{name}: queue full ({depth} pending), load shed")
+        self.model = name
+        self.depth = depth
+
+
+class Clock:
+    """Monotonic wall clock + real asyncio sleep (production default)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    async def sleep(self, dt: float) -> None:
+        await asyncio.sleep(max(dt, 0.0))
+
+
+class FakeClock(Clock):
+    """Deterministic virtual clock for tests: ``now()`` returns virtual
+    time, ``sleep`` parks on a future, and ``advance(dt)`` releases due
+    sleepers in deadline order, yielding to the event loop between each so
+    woken coroutines run to their next await before time moves further.
+    No real time passes."""
+
+    def __init__(self):
+        self._t = 0.0
+        self._seq = 0
+        self._sleepers = []  # heap of (deadline, seq, future)
+
+    def now(self) -> float:
+        return self._t
+
+    async def sleep(self, dt: float) -> None:
+        if dt <= 0:
+            await asyncio.sleep(0)
+            return
+        fut = asyncio.get_running_loop().create_future()
+        heapq.heappush(self._sleepers, (self._t + dt, self._seq, fut))
+        self._seq += 1
+        await fut
+
+    async def advance(self, dt: float) -> None:
+        target = self._t + dt
+        # 1 ns tolerance: accumulated float steps (0.009 + 0.001) must still
+        # release a sleeper parked at exactly 0.010.
+        while self._sleepers and self._sleepers[0][0] <= target + 1e-9:
+            deadline, _, fut = heapq.heappop(self._sleepers)
+            self._t = max(self._t, deadline)
+            if not fut.done():  # cancelled sleeps are skipped
+                fut.set_result(None)
+            await self.drain()
+        self._t = max(self._t, target)  # never move backward past a sleeper
+        await self.drain()
+
+    @staticmethod
+    async def drain(rounds: int = 10) -> None:
+        """Yield to the loop until ready callbacks/coroutines settle."""
+        for _ in range(rounds):
+            await asyncio.sleep(0)
+
+
+class _Request:
+    __slots__ = ("x", "future", "t")
+
+    def __init__(self, x, future, t):
+        self.x = x
+        self.future = future
+        self.t = t
+
+
+class MicroBatcher:
+    """Coalesce single-sample requests into bucket-sized device calls.
+
+    ``infer`` is a blocking callable mapping a stacked ``(n, ...)`` input
+    array to ``(n, ...)`` output rows; :meth:`for_model` builds one from a
+    ``CompiledModel`` via ``predict_q_many`` and warms its batch buckets.
+    Inference runs inline on the event loop: for TinyML-scale graphs the
+    call is the work, and keeping it on-loop makes scheduling deterministic
+    under the fake clock.
+    """
+
+    def __init__(self, infer: Callable, *, name: str = "model",
+                 max_batch: int = 32, max_delay_s: float = 0.002,
+                 max_queue: int = 256, clock: Optional[Clock] = None,
+                 metrics: Optional[ModelMetrics] = None):
+        assert max_batch >= 1 and max_queue >= 1
+        self._infer = infer
+        self.name = name
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self.max_queue = max_queue
+        self.clock = clock or Clock()
+        self.metrics = metrics if metrics is not None else \
+            ModelMetrics(now=self.clock.now())
+        self._pending = []
+        self._arrival = asyncio.Event()
+        self._task: Optional[asyncio.Task] = None
+        self._closed = False
+
+    @classmethod
+    def for_model(cls, model, *, warmup: bool = True, **kw) -> "MicroBatcher":
+        """Batcher over ``CompiledModel.predict_q_many``. With ``warmup``
+        every power-of-two bucket up to ``max_batch`` is AOT-compiled now,
+        so no request ever pays a compile on the hot path."""
+        max_batch = kw.get("max_batch", 32)
+        if warmup:
+            # only the bucketed batch executables: the batcher always stacks
+            # requests, so the unbatched AOT path is never on its hot path
+            model.warmup_batched(max_batch)
+        return cls(lambda xs: model.predict_q_many(xs, max_batch=max_batch),
+                   **kw)
+
+    # -- client side ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, x) -> asyncio.Future:
+        """Enqueue one request; returns a future resolving to its output
+        row. Raises :class:`QueueFullError` when the bounded queue is at
+        capacity (load shedding) and ``RuntimeError`` when closed."""
+        if self._closed:
+            raise RuntimeError(f"{self.name}: batcher is closed")
+        if len(self._pending) >= self.max_queue:
+            self.metrics.observe_reject()
+            raise QueueFullError(self.name, len(self._pending))
+        fut = asyncio.get_running_loop().create_future()
+        self._pending.append(_Request(x, fut, self.clock.now()))
+        self.metrics.observe_submit()
+        self._arrival.set()
+        return fut
+
+    async def infer(self, x):
+        return await self.submit(x)
+
+    # -- scheduler side ---------------------------------------------------
+    def start(self) -> "MicroBatcher":
+        if self._closed:  # close() is terminal — no half-alive restarts
+            raise RuntimeError(f"{self.name}: batcher is closed")
+        if self._task is None:
+            self._task = asyncio.get_running_loop().create_task(self._run())
+        return self
+
+    async def close(self, drain: bool = True) -> None:
+        """Stop the scheduler. With ``drain`` remaining requests are
+        flushed synchronously; otherwise their futures are cancelled."""
+        self._closed = True
+        if self._task is not None:
+            self._task.cancel()
+            with contextlib.suppress(asyncio.CancelledError):
+                await self._task
+            self._task = None
+        if drain:
+            while self._pending:
+                self._flush()
+        else:
+            for r in self._pending:
+                if not r.future.done():
+                    r.future.cancel()
+                self.metrics.observe_fail()
+            self._pending.clear()
+
+    async def __aenter__(self):
+        return self.start()
+
+    async def __aexit__(self, *exc):
+        await self.close()
+
+    async def _run(self) -> None:
+        while True:
+            if not self._pending:
+                self._arrival.clear()
+                await self._arrival.wait()
+            # Oldest request anchors the flush deadline; the inner wait
+            # re-checks after every arrival so a bucket-full queue flushes
+            # immediately, without consuming any of its deadline.
+            deadline = self._pending[0].t + self.max_delay_s
+            while 0 < len(self._pending) < self.max_batch:
+                remaining = deadline - self.clock.now()
+                if remaining <= 0:
+                    break
+                self._arrival.clear()
+                await self._arrival_or_sleep(remaining)
+            self._flush()
+
+    async def _arrival_or_sleep(self, dt: float) -> None:
+        """Wake on a new arrival or after ``dt`` (clock-driven), whichever
+        comes first; the loser is cancelled."""
+        ev = asyncio.ensure_future(self._arrival.wait())
+        sl = asyncio.ensure_future(self.clock.sleep(dt))
+        try:
+            await asyncio.wait({ev, sl},
+                               return_when=asyncio.FIRST_COMPLETED)
+        finally:
+            for t in (ev, sl):
+                t.cancel()
+                with contextlib.suppress(asyncio.CancelledError):
+                    await t
+
+    def _flush(self) -> None:
+        take = min(len(self._pending), self.max_batch)
+        if take == 0:
+            return
+        reqs = self._pending[:take]
+        del self._pending[:take]
+        t0 = self.clock.now()
+        try:
+            # staging included: a malformed request (wrong sample shape)
+            # must poison its batch, not kill the scheduler task
+            xs = np.stack([np.asarray(r.x) for r in reqs])
+            ys = np.asarray(self._infer(xs))
+            if ys.shape[:1] != (take,):
+                raise ValueError(f"{self.name}: infer returned shape "
+                                 f"{ys.shape} for a {take}-row batch")
+        except Exception as e:  # poison batch fails its requests, not the
+            for r in reqs:      # scheduler — the loop keeps serving
+                if not r.future.done():
+                    r.future.set_exception(e)
+                self.metrics.observe_fail()
+            return
+        t1 = self.clock.now()
+        self.metrics.observe_batch(take, bucket_for(take), t1 - t0)
+        for r, y in zip(reqs, ys):
+            if not r.future.done():  # caller may have cancelled/timed out
+                r.future.set_result(y)
+                self.metrics.observe_done(t1 - r.t)
+            else:
+                self.metrics.observe_fail()

@@ -1,0 +1,152 @@
+"""Direct coverage for two paths previously only exercised indirectly:
+
+* ``core.paging.paged_fc_folded`` at graph level — a ``CompiledModel`` with
+  ``paged={op_index: n_pages}`` must be bit-identical to the unpaged
+  engine for every page count, on single-layer and multi-layer graphs and
+  through the batched-bucket serving path.
+* ``serve.quantized`` weight-only PTQ — quantize/dequantize round-trip
+  error bounds, idempotence, leaf selection, and byte accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import build_sine
+from repro.core import CompiledModel
+from repro.core.builder import GraphBuilder
+from repro.core.quantize import quantize_graph
+from repro.serve.quantized import (QuantizedTensor, dequantize_params,
+                                   param_bytes, quantize_params)
+
+
+def _fc_graph(n_in=24, n_out=32, batch=3, fused="RELU", seed=0):
+    rng = np.random.default_rng(seed)
+    b = GraphBuilder("paged_fc_test")
+    x = b.input("x", (batch, n_in))
+    y = b.fully_connected(x, rng.normal(0, 0.3, (n_in, n_out)).astype("f"),
+                          rng.normal(size=n_out).astype("f"), fused=fused)
+    b.output(y)
+    g = b.build()
+    qg = quantize_graph(
+        g, [rng.normal(size=(batch, n_in)).astype("f") for _ in range(4)])
+    qx = np.asarray(qg.tensor(qg.inputs[0]).qparams.quantize(
+        rng.normal(size=(batch, n_in)).astype("f")))
+    return qg, qx
+
+
+# ------------------------------------------------- paged graph-level parity
+
+@pytest.mark.parametrize("n_pages", [1, 2, 8, 32])
+@pytest.mark.parametrize("fused", ["NONE", "RELU"])
+def test_paged_fc_single_layer_bit_exact(n_pages, fused):
+    qg, qx = _fc_graph(fused=fused)
+    ref = np.asarray(CompiledModel(qg).predict_q(qx))
+    out = np.asarray(CompiledModel(qg, paged={0: n_pages}).predict_q(qx))
+    assert out.dtype == ref.dtype == np.int8
+    assert np.array_equal(out, ref)
+
+
+def test_paged_fc_multi_layer_graph_parity():
+    """Paging individual layers of a deeper graph (the sine FC chain) —
+    paged and unpaged layers interleave and stay bit-exact end to end."""
+    rng = np.random.default_rng(3)
+    qg = quantize_graph(
+        build_sine(),
+        [rng.uniform(0, 2 * np.pi, (1, 1)).astype("f") for _ in range(8)])
+    qx = np.asarray(qg.tensor(qg.inputs[0]).qparams.quantize(
+        rng.uniform(0, 2 * np.pi, (1, 1)).astype("f")))
+    ref = np.asarray(CompiledModel(qg).predict_q(qx))
+    # fc1/fc2 have 16 output units: page them differently; fc3 stays whole
+    out = np.asarray(
+        CompiledModel(qg, paged={0: 4, 1: 2}).predict_q(qx))
+    assert np.array_equal(out, ref)
+
+
+def test_paged_fc_invalid_page_count_rejected():
+    qg, qx = _fc_graph(n_out=32)
+    with pytest.raises(AssertionError):
+        # 32 output units cannot split into 5 equal pages
+        CompiledModel(qg, paged={0: 5}).predict_q(qx)
+
+
+def test_paged_fc_batched_buckets_match_unpaged():
+    """The serving path composes with paging: bucketed batch calls on a
+    paged model match the unpaged model row for row."""
+    qg, _ = _fc_graph(batch=1)
+    rng = np.random.default_rng(4)
+    xs = rng.normal(size=(5, 1, 24)).astype("f")
+    qxs = np.asarray(qg.tensor(qg.inputs[0]).qparams.quantize(xs))
+    ref = np.asarray(CompiledModel(qg).predict_q(qxs))
+    out = np.asarray(CompiledModel(qg, paged={0: 8}).predict_q(qxs))
+    assert np.array_equal(out, ref)
+
+
+# -------------------------------------------- serve.quantized round-trip
+
+def _param_tree(rng):
+    return {
+        "w_big": jnp.asarray(rng.normal(0, 0.5, (64, 128)).astype("f")),
+        "w_3d": jnp.asarray(rng.normal(0, 0.2, (4, 64, 32)).astype("f")),
+        "bias": jnp.asarray(rng.normal(size=128).astype("f")),  # 1-D: kept
+        "small": jnp.asarray(rng.normal(size=(4, 8)).astype("f")),  # tiny
+        "ids": jnp.arange(10, dtype=jnp.int32),  # non-float: kept
+    }
+
+
+def test_quantize_params_leaf_selection():
+    q = quantize_params(_param_tree(np.random.default_rng(0)))
+    assert isinstance(q["w_big"], QuantizedTensor)
+    assert isinstance(q["w_3d"], QuantizedTensor)
+    assert q["w_big"].q.dtype == jnp.int8
+    # per-output-channel scales, one per trailing-axis channel
+    assert q["w_big"].scale.shape == (128,)
+    assert q["w_3d"].scale.shape == (32,)
+    # biases (1-D), small matrices, and integer leaves pass through
+    for k in ("bias", "small", "ids"):
+        assert not isinstance(q[k], QuantizedTensor)
+
+
+def test_quantize_dequantize_round_trip_error_bound():
+    params = _param_tree(np.random.default_rng(1))
+    q = quantize_params(params)
+    deq = dequantize_params(q)
+    assert jax.tree.structure(deq) == jax.tree.structure(params)
+    for key in ("w_big", "w_3d"):
+        w = np.asarray(params[key], np.float64)
+        back = np.asarray(deq[key], np.float64)
+        # symmetric int8: per-channel |err| <= scale/2 = absmax/254
+        scale = np.asarray(q[key].scale, np.float64)
+        assert np.all(np.abs(back - w) <= scale / 2 + 1e-7)
+        # and the relative error is small on real-valued weights
+        assert np.max(np.abs(back - w)) / np.max(np.abs(w)) < 0.01
+    # untouched leaves come back identical
+    assert np.array_equal(np.asarray(deq["bias"]),
+                          np.asarray(params["bias"]))
+
+
+def test_quantize_is_idempotent_through_round_trip():
+    """Re-quantizing dequantized weights reproduces the same int8 codes:
+    the lattice is a fixed point of the round trip."""
+    params = _param_tree(np.random.default_rng(2))
+    q1 = quantize_params(params)
+    q2 = quantize_params(dequantize_params(q1))
+    for key in ("w_big", "w_3d"):
+        assert np.array_equal(np.asarray(q1[key].q), np.asarray(q2[key].q))
+        assert np.allclose(np.asarray(q1[key].scale),
+                           np.asarray(q2[key].scale), rtol=1e-6)
+
+
+def test_quantized_tensor_is_pytree_and_shrinks_bytes():
+    params = _param_tree(np.random.default_rng(5))
+    q = quantize_params(params)
+    # pytree round trip (what jit/donation relies on)
+    leaves, treedef = jax.tree.flatten(q)
+    q2 = jax.tree.unflatten(treedef, leaves)
+    assert np.array_equal(np.asarray(q2["w_big"].q),
+                          np.asarray(q["w_big"].q))
+    # int8 storage: the big float32 matrices shrink ~4x (plus scales)
+    before = param_bytes(jax.tree.leaves(params))
+    after = param_bytes(jax.tree.leaves(q))
+    assert after < before / 2
+    assert q["w_big"].dequantize().dtype == jnp.float32

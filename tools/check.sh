@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Full local/CI gate:
+#   1. tier-1 test suite (ROADMAP.md contract)
+#   2. fast benchmark run -> fresh BENCH json
+#   3. bench-name regression check against the committed baseline
+#
+#   tools/check.sh [--skip-tests]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+if [[ "${1:-}" != "--skip-tests" ]]; then
+    echo "== tier-1 tests =="
+    python -m pytest -x -q
+fi
+
+echo "== benchmarks (--fast) =="
+fresh="$(mktemp -t BENCH_check.XXXXXX.json)"
+trap 'rm -f "$fresh"' EXIT
+python -m benchmarks.run --fast --json-out "$fresh"
+
+echo "== bench-name regression check =="
+python tools/check_bench.py BENCH_runtime.json "$fresh"
+
+echo "check.sh: all gates passed"

@@ -1,0 +1,42 @@
+"""Bench-name regression gate: every record name in the committed
+BENCH_runtime.json baseline must still be produced by a fresh run.
+
+A disappearing name means a benchmark silently stopped measuring something
+(a renamed record, a dropped code path) — exactly the kind of rot a perf
+trajectory tracked across PRs cannot absorb. New names are fine (benches
+grow); missing names fail.
+
+  python tools/check_bench.py BASELINE.json FRESH.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main(baseline_path: str, fresh_path: str) -> int:
+    with open(baseline_path) as f:
+        baseline = set(json.load(f))
+    with open(fresh_path) as f:
+        fresh = set(json.load(f))
+    missing = sorted(baseline - fresh)
+    added = sorted(fresh - baseline)
+    if added:
+        print(f"check_bench: {len(added)} new record(s): "
+              + ", ".join(added))
+    if missing:
+        print(f"check_bench: FAIL — {len(missing)} baseline record(s) "
+              f"missing from the fresh run:", file=sys.stderr)
+        for name in missing:
+            print(f"  - {name}", file=sys.stderr)
+        return 1
+    print(f"check_bench: OK — all {len(baseline)} baseline names present "
+          f"({len(fresh)} total)")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))
