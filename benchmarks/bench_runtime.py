@@ -49,7 +49,7 @@ def main(fast: bool = False):
                 iters=max(iters // 4, 5))
             lines.append(csv_line(
                 f"runtime/{name}_compiled_pallas_us", us_p,
-                f"planned layout; {mode}", ci=(lo, hi)))
+                f"planned layout; {mode}", ci=(lo, hi), layout_plan=True))
 
         # Batched serving: amortize dispatch over B requests in one call.
         # The record name is batch-size-independent (batch goes in the

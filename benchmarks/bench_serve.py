@@ -19,6 +19,13 @@ do the work):
   (flush-deadline bound), and how many requests the bounded queue shed.
   Names are identical in --fast and full runs so tools/check.sh can diff
   name sets across runs.
+* ``serve/sine_batched_{planned,percall}_us`` +
+  ``serve/sine_batched_pads_percall_vs_planned`` — A/B of the Pallas
+  batched flush path (the exact ``predict_q_many`` call every MicroBatcher
+  flush makes) with the compile-time layout plan on vs off, plus the
+  structural delta: how many ``pad`` ops the per-call route pays in the
+  bucket executable's trace vs the planned route (deterministic, so
+  ``tools/check_bench.py`` gates the ratio staying >= 1.0).
 
 All records land in BENCH_runtime.json via benchmarks.run.
 """
@@ -29,13 +36,13 @@ import time
 
 import numpy as np
 
-from repro.core import CompiledModel
+from repro.core import CompiledModel, bucket_for
 from repro.core.quantize import quantize_graph
 from repro.configs.paper_models import build_sine
 from repro.serve.metrics import ModelMetrics
 from repro.serve.scheduler import Clock, MicroBatcher, QueueFullError
 
-from .common import csv_line
+from .common import csv_line, median_time_us
 
 MAX_BATCH = 128   # engine cost/req: ~17us @64 -> ~7us @128 on CPU
 MAX_DELAY_S = 0.002
@@ -51,7 +58,17 @@ def _sine_model():
     qp = qg.tensor(qg.inputs[0]).qparams
     qxs = [np.asarray(qp.quantize(
         rng.uniform(0, 2 * np.pi, (1, 1)).astype("f"))) for _ in range(64)]
-    return cm, qxs
+    return qg, cm, qxs
+
+
+def _batched_pad_ops(cm: CompiledModel, batch: int) -> int:
+    """``pad`` primitives in the bucket executable's jaxpr — the per-flush
+    layout churn the compile-time plan removes."""
+    from repro.core.introspect import prim_counts
+
+    ep = cm.exec_plan
+    specs = ep.batched_input_specs(bucket_for(batch))
+    return prim_counts(ep.lower(batched=True), *specs).get("pad", 0)
 
 
 def _serial_rps(cm, qxs, n: int) -> float:
@@ -123,7 +140,7 @@ async def _open_loop(b: MicroBatcher, qxs, rate_rps: float, n: int,
 
 def main(fast: bool = False):
     lines = []
-    cm, qxs = _sine_model()
+    qg, cm, qxs = _sine_model()
 
     n_engine = 256 if fast else 1024
     engine_rps = _serial_rps(cm, qxs, n_engine)
@@ -161,6 +178,35 @@ def main(fast: bool = False):
             f"offered={res['offered_rps']:.0f}rps "
             f"achieved={res['achieved_rps']:.0f}rps shed={res['shed']} "
             f"occupancy={0.0 if res['occupancy'] is None else res['occupancy']:.2f}"))
+
+    # Layout-planned vs per-call batched serving (ExecutionPlan A/B): time
+    # the exact flush call the MicroBatcher makes (predict_q_many on a full
+    # bucket) through the Pallas route with the compile-time layout plan on
+    # vs off. The structural delta — pad ops per bucket trace — is recorded
+    # as a deterministic ratio so route regressions fail the bench gate
+    # even when interpret-mode timing noise hides the wall-clock delta.
+    batch = 32 if fast else 64
+    qxb = np.stack([qxs[i % len(qxs)] for i in range(batch)])
+    times, pads = {}, {}
+    for planned in (True, False):
+        m = CompiledModel(qg, use_pallas=True, layout_plan=planned)
+        # only the full bucket is ever dispatched (one exact chunk); the
+        # staged entry pad is warmed by median_time_us's warmup calls
+        m.compile_batched(batch)
+        us, lo, hi = median_time_us(
+            lambda m=m: np.asarray(m.predict_q_many(qxb, max_batch=batch)),
+            iters=10 if fast else 20)
+        times[planned], pads[planned] = us, _batched_pad_ops(m, batch)
+        route = "planned" if planned else "percall"
+        lines.append(csv_line(
+            f"serve/sine_batched_{route}_us", us,
+            f"pallas flush bucket={batch} pads={pads[planned]} "
+            f"ci95=({lo:.0f};{hi:.0f})", ci=(lo, hi), layout_plan=planned))
+    lines.append(csv_line(
+        "serve/sine_batched_pads_percall_vs_planned", None,
+        f"bucket-trace pad ops {pads[False]} -> {pads[True]}; "
+        f"timing {times[False] / times[True]:.2f}x",
+        ratio=pads[False] / max(pads[True], 1), layout_plan=True))
     return lines
 
 

@@ -32,13 +32,17 @@ def median_time_us(fn, iters: int = 100, warmup: int = 3):
 
 
 def csv_line(name: str, us=None, derived: str = "", ci=None,
-             ratio=None) -> str:
+             ratio=None, layout_plan=None) -> str:
     """Print one CSV line and keep a structured record of it.
 
     ``us`` is the record's timing (``median_us``); pass ``None`` for
     records that carry no timing. ``ratio`` is for derived dimensionless
     values (speedups, slowdowns, throughput ratios) — they land in a
     dedicated field instead of masquerading as a 0.0 µs timing.
+    ``layout_plan`` records which engine route the measurement ran:
+    ``True`` for the compile-time planned-layout route, ``False`` for the
+    per-call pad/slice route, ``None`` when no Pallas layout is involved —
+    so planned-vs-per-call numbers are distinguishable in the trajectory.
 
     Every record also captures ``jax.default_backend()`` and whether the
     Pallas kernels run in interpret mode (CPU fallback), so committed
@@ -54,6 +58,7 @@ def csv_line(name: str, us=None, derived: str = "", ci=None,
                     "ratio": None if ratio is None else float(ratio),
                     "backend": backend,
                     "pallas_interpret": interpret_mode(),
+                    "layout_plan": layout_plan,
                     "derived": derived})
     return line
 

@@ -71,7 +71,8 @@ def main() -> None:
         doc.update({r["name"]: {"median_us": r["median_us"],
                                 "ci95": r["ci95"], "ratio": r["ratio"],
                                 "backend": r["backend"],
-                                "pallas_interpret": r["pallas_interpret"]}
+                                "pallas_interpret": r["pallas_interpret"],
+                                "layout_plan": r["layout_plan"]}
                     for r in common.RECORDS
                     if r["name"].startswith(json_prefixes)})
         with open(args.json_out, "w") as f:

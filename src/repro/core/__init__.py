@@ -1,6 +1,8 @@
 """repro.core — MicroFlow's contribution in JAX: graph IR, quantization,
 compile-time folding, interpreter baseline, AOT compiled engine, static
 memory planning, paging."""
-from . import graph, builder, quantize, ops_ref, preprocess, memory, paging  # noqa: F401
-from .engine import CompiledModel, build_graph_fn, bucket_for  # noqa: F401
+from . import (graph, builder, quantize, ops_ref, preprocess,  # noqa: F401
+               memory, paging, introspect)
+from .engine import (CompiledModel, ExecutionPlan, build_graph_fn,  # noqa: F401
+                     bucket_floor, bucket_for, dispatched_bucket_rows)
 from .interpreter import Interpreter  # noqa: F401

@@ -12,6 +12,18 @@ The whole graph is translated, ahead of time, into ONE program:
   inputs effectively *owned and dropped* (liveness-based reuse), mirroring
   Sec. 4.1; the byte-exact plan is reported by ``memory.plan_stack``.
 
+Everything resolved before the first inference lives in ONE object: the
+:class:`ExecutionPlan` — graph + folded Eq. (4)/(7)/(10) constants +
+compile-time ``LayoutPlan`` + paging map + route flags. It is the single
+source of lowering truth: ``CompiledModel`` builds exactly one at
+construction, and the per-call trace (``compile``) and every batched bucket
+executable (``compile_batched`` / ``warmup_batched`` / the serving path)
+lower from it via :meth:`ExecutionPlan.lower`. The batched trace therefore
+keeps the layout plan: activations stay lane-padded across consecutive
+Pallas layers inside every served bucket, and the bucket zero-fill pad
+fuses with the layout entry pad into a single staged device pad
+(``entry_phys``), so bucket executables contain no entry layout churn.
+
 Per-op lowering comes from the single-source :mod:`repro.core.registry`; the
 interpreter baseline consumes the same registry, so engine parity is
 structural rather than a convention.
@@ -23,6 +35,9 @@ Options:
                 (``preprocess.plan_layout``) keeps activations lane-padded
                 across consecutive Pallas ops — padding only at graph entry,
                 slicing only at graph outputs and non-Pallas boundaries.
+  layout_plan — on by default; ``layout_plan=False`` keeps the per-call
+                pad/slice route (single-call AND batched) for debugging and
+                A/B benchmarks.
   paged       — {op_index: n_pages}: execute those FC layers page-by-page
                 (Sec. 4.3), bounding resident weight bytes.
 
@@ -33,6 +48,7 @@ many concurrent requests without per-size recompilation.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -42,51 +58,111 @@ import numpy as np
 from . import graph as G
 from . import registry as R
 from .memory import memory_report
-from .preprocess import plan_layout, preprocess_graph
+from .preprocess import LayoutPlan, plan_layout, preprocess_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything resolved at compile time, in one object.
+
+    ``graph`` + ``folded`` (the parser phase) + ``layout`` (the padded
+    physical layouts, batch-neutral) + ``paged`` + ``use_pallas`` fully
+    determine every lowering of the model; both the per-call and batched
+    traces are produced by :meth:`lower`, so there is no second place where
+    routing or layout decisions can drift.
+    """
+
+    graph: G.Graph
+    folded: dict
+    layout: Optional[LayoutPlan]
+    paged: dict
+    use_pallas: bool
+
+    @classmethod
+    def build(cls, g: G.Graph, use_pallas: bool = False,
+              paged: Optional[dict] = None,
+              layout_plan: bool = True) -> "ExecutionPlan":
+        g.validate()
+        folded = preprocess_graph(g)  # compile-time parser phase
+        paged = dict(paged or {})
+        layout = (plan_layout(g, folded, paged)
+                  if (use_pallas and layout_plan) else None)
+        return cls(g, folded, layout, paged, use_pallas)
+
+    def entry_shape(self, tid) -> tuple:
+        """Per-sample physical shape graph input ``tid`` is staged in on the
+        batched trace: lane-padded when a planned Pallas op consumes it (the
+        bucket-fill and entry lane pads then fuse into one staged pad),
+        logical otherwise."""
+        if self.layout is not None:
+            phys = self.layout.entry_phys.get(tid)
+            if phys is not None:
+                return tuple(phys)
+        return tuple(self.graph.tensor(tid).shape)
+
+    def batched_input_specs(self, bucket: int) -> list:
+        """ShapeDtypeStructs a bucket executable is lowered against — the
+        staged-pad entry contract, single-sourced so benches and tests trace
+        exactly the program serving runs."""
+        return [jax.ShapeDtypeStruct((bucket,) + self.entry_shape(t),
+                                     np.dtype(self.graph.tensor(t).dtype))
+                for t in self.graph.inputs]
+
+    def lower(self, batched: bool = False):
+        """Returns fn(*graph_dtype_inputs) -> tuple(graph_dtype_outputs).
+
+        With ``batched=True`` every activation (inputs included) carries one
+        extra leading batch dimension and ops run through their registry
+        batch rules; inputs may arrive in ``entry_shape`` physical layout
+        (the staged-pad contract) or logical (the kernels then pad).
+
+        With a layout plan, Pallas-routed ops exchange activations in
+        lane-padded physical layout: padding happens only at graph entry,
+        slicing only at graph outputs and non-Pallas boundaries — interior
+        Pallas→Pallas edges carry the padded block untouched, on both the
+        per-call and batched traces.
+        """
+        g, folded, paged = self.graph, self.folded, self.paged
+        use_pallas = self.use_pallas
+        run = R.run_batched if batched else R.run_compiled
+        layouts = self.layout.layouts if self.layout is not None else {}
+        lead = (slice(None),) if batched else ()
+
+        def fn(*inputs):
+            env = dict(zip(g.inputs, inputs))
+
+            def val(tid, keep_padded=False):
+                t = g.tensor(tid)
+                if t.is_const:
+                    return jnp.asarray(t.data)
+                v = env[tid]
+                # Physical (padded) values advertise themselves by shape;
+                # consumers outside the planned region get the logical view.
+                if not keep_padded and v.shape[len(lead):] != tuple(t.shape):
+                    v = v[lead + tuple(slice(0, d) for d in t.shape)]
+                return v
+
+            for i, op in enumerate(g.ops):
+                lay = layouts.get(i)
+                ctx = R.OpContext(g, op, i, folded=folded.get(i),
+                                  use_pallas=use_pallas, n_pages=paged.get(i),
+                                  layout=lay)
+                env[op.outputs[0]] = run(ctx, [val(t, keep_padded=lay is not None)
+                                               for t in op.inputs])
+
+            return tuple(val(t) for t in g.outputs)
+
+        return fn
 
 
 def build_graph_fn(g: G.Graph, folded: dict, use_pallas: bool = False,
                    paged: Optional[dict] = None, batched: bool = False,
                    plan=None):
-    """Returns fn(*graph_dtype_inputs) -> tuple(graph_dtype_outputs).
-
-    With ``batched=True`` every activation (inputs included) carries one
-    extra leading batch dimension and ops run through their registry batch
-    rules.
-
-    With a ``plan`` (``preprocess.LayoutPlan``), Pallas-routed ops exchange
-    activations in lane-padded physical layout: padding happens only at
-    graph entry, slicing only at graph outputs and non-Pallas boundaries —
-    interior Pallas→Pallas edges carry the padded block untouched.
-    """
-    paged = paged or {}
-    run = R.run_batched if batched else R.run_compiled
-    layouts = plan.layouts if plan is not None else {}
-    phys = plan.phys if plan is not None else {}
-
-    def fn(*inputs):
-        env = dict(zip(g.inputs, inputs))
-
-        def val(tid, keep_padded=False):
-            t = g.tensor(tid)
-            if t.is_const:
-                return jnp.asarray(t.data)
-            v = env[tid]
-            if not keep_padded and tid in phys:
-                v = v[tuple(slice(0, d) for d in t.shape)]
-            return v
-
-        for i, op in enumerate(g.ops):
-            lay = layouts.get(i)
-            ctx = R.OpContext(g, op, i, folded=folded.get(i),
-                              use_pallas=use_pallas, n_pages=paged.get(i),
-                              layout=lay)
-            env[op.outputs[0]] = run(ctx, [val(t, keep_padded=lay is not None)
-                                           for t in op.inputs])
-
-        return tuple(val(t) for t in g.outputs)
-
-    return fn
+    """Compatibility wrapper: assemble an :class:`ExecutionPlan` from loose
+    pieces and lower it. New code should build the plan once and call
+    :meth:`ExecutionPlan.lower` for each trace it needs."""
+    return ExecutionPlan(g, folded, plan, dict(paged or {}),
+                         use_pallas).lower(batched=batched)
 
 
 def bucket_for(batch: int) -> int:
@@ -98,26 +174,60 @@ def bucket_for(batch: int) -> int:
     return 1 << max(0, int(batch - 1).bit_length())
 
 
+def bucket_floor(batch: int) -> int:
+    """Largest power-of-two bucket <= ``batch`` (>= 1): the chunk size that
+    fills a bucket exactly instead of padding past it."""
+    return 1 << (max(1, int(batch)).bit_length() - 1)
+
+
+def dispatched_bucket_rows(batch: int, max_batch: Optional[int] = None) -> int:
+    """Total bucket rows ``predict_q_many(batch, max_batch=...)`` actually
+    dispatches: full ``bucket_floor(max_batch)`` chunks are exact, only the
+    tail pads — to its own bucket. Public so serving metrics (batch
+    occupancy) account for what the engine really paid."""
+    if max_batch is None:
+        return bucket_for(batch)
+    step = bucket_floor(max_batch)
+    if batch <= step:
+        return bucket_for(batch)
+    full, rem = divmod(batch, step)
+    return full * step + (bucket_for(rem) if rem else 0)
+
+
 class CompiledModel:
     """The user-facing ``predict()`` the paper's ``model`` macro generates."""
 
     def __init__(self, g: G.Graph, use_pallas: bool = False,
                  paged: Optional[dict] = None, layout_plan: bool = True):
-        g.validate()
-        self.graph = g
-        self.use_pallas = use_pallas
-        self.paged = paged
-        self.folded = preprocess_graph(g)  # compile-time parser phase
-        # Compile-time padded-layout plan: activations stay lane-padded
-        # across consecutive Pallas-routed ops (layout_plan=False keeps the
-        # per-call pad/slice route, for debugging and A/B benchmarks).
-        self.plan = (plan_layout(g, self.folded, paged)
-                     if (use_pallas and layout_plan) else None)
-        self._fn = jax.jit(build_graph_fn(g, self.folded, use_pallas, paged,
-                                          plan=self.plan))
+        self.exec_plan = ExecutionPlan.build(g, use_pallas, paged,
+                                             layout_plan)
+        self._fn = jax.jit(self.exec_plan.lower())
         self._aot = None
         self._batched_aot = {}  # bucket size -> AOT executable
-        self._stage_pad = {}    # (shape, pad) -> jitted device-side pad
+        self._stage_pad = {}    # (shape, widths) -> jitted device-side pad
+
+    # Everything compile-time lives in the ExecutionPlan; these read-only
+    # views keep the established attribute API without a second copy that
+    # could drift from what actually lowers.
+    @property
+    def graph(self) -> G.Graph:
+        return self.exec_plan.graph
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.exec_plan.use_pallas
+
+    @property
+    def paged(self) -> dict:
+        return self.exec_plan.paged
+
+    @property
+    def folded(self) -> dict:
+        return self.exec_plan.folded
+
+    @property
+    def plan(self):
+        return self.exec_plan.layout  # LayoutPlan (None when off)
 
     def _input_specs(self, lead=()):
         return [jax.ShapeDtypeStruct(tuple(lead) + self.graph.tensor(t).shape,
@@ -131,22 +241,24 @@ class CompiledModel:
         return self._aot
 
     def compile_batched(self, batch: int):
-        """AOT-compile (and cache) the executable for ``batch``'s bucket.
+        """AOT-compile (and cache) the executable for ``batch``'s bucket,
+        lowered from the shared :class:`ExecutionPlan` (layout plan
+        included). Inputs arrive in staged entry layout — bucket-filled and
+        lane-padded by ONE fused device pad in ``_predict_q_batched`` — so
+        the executable itself contains no entry layout work.
 
         Input buffers are donated where the backend supports it — the
-        batched path always stages fresh device buffers (see
-        ``_predict_q_batched``), so donation is safe and lets XLA reuse the
-        int8 input storage for activations."""
+        batched path always stages fresh device buffers, so donation is
+        safe and lets XLA reuse the int8 input storage for activations."""
         bucket = bucket_for(batch)
         exe = self._batched_aot.get(bucket)
         if exe is None:
             donate = (tuple(range(len(self.graph.inputs)))
                       if jax.default_backend() != "cpu" else ())
-            fn = jax.jit(build_graph_fn(self.graph, self.folded,
-                                        self.use_pallas, self.paged,
-                                        batched=True),
+            fn = jax.jit(self.exec_plan.lower(batched=True),
                          donate_argnums=donate)
-            exe = fn.lower(*self._input_specs(lead=(bucket,))).compile()
+            exe = fn.lower(*self.exec_plan.batched_input_specs(bucket)) \
+                    .compile()
             self._batched_aot[bucket] = exe
         return exe
 
@@ -158,11 +270,11 @@ class CompiledModel:
 
     def warmup_batched(self, max_batch: int):
         """Ahead-of-serving warm-up: AOT-compile every power-of-two bucket
-        up to ``max_batch``'s bucket AND the device-side bucket-fill pad
-        stage for every batch size below it. After this, no batch size
-        ``<= max_batch`` triggers any compilation at request time — the
-        serving-path analogue of the paper's everything-at-compile-time
-        rule."""
+        up to ``max_batch``'s bucket AND the staged entry pad (fused bucket
+        zero-fill + layout lane pad) for every batch size at or below it.
+        After this, no batch size ``<= max_batch`` triggers any compilation
+        at request time — the serving-path analogue of the paper's
+        everything-at-compile-time rule."""
         top = bucket_for(max_batch)
         b = 1
         while b <= top:
@@ -170,11 +282,11 @@ class CompiledModel:
             b *= 2
         for tid in self.graph.inputs:
             t = self.graph.tensor(tid)
-            for batch in range(1, top):
-                pad = bucket_for(batch) - batch
-                if pad:
-                    shape = (batch,) + t.shape
-                    self._bucket_pad(shape, pad)(
+            for batch in range(1, top + 1):
+                widths = self._entry_widths(tid, batch)
+                if any(w for _, w in widths):
+                    shape = (batch,) + tuple(t.shape)
+                    self._staged_pad(shape, widths)(
                         jnp.zeros(shape, np.dtype(t.dtype)))
         return self
 
@@ -202,20 +314,27 @@ class CompiledModel:
         t0 = self.graph.tensor(self.graph.inputs[0])
         return np.ndim(first_input) == len(t0.shape) + 1
 
-    def _bucket_pad(self, shape: tuple, pad: int):
-        """Jitted device-side zero-pad of the leading (batch) dim — the
-        bucket fill never round-trips through host memory."""
-        key = (shape, pad)
+    def _staged_pad(self, shape: tuple, widths: tuple):
+        """Jitted device-side zero pad covering the bucket fill on the
+        leading (batch) dim AND the planned entry lane pad in one op — the
+        staging never round-trips through host memory."""
+        key = (tuple(shape), tuple(widths))
         fn = self._stage_pad.get(key)
         if fn is None:
-            widths = ((0, pad),) + ((0, 0),) * (len(shape) - 1)
             fn = jax.jit(lambda a: jnp.pad(a, widths))
             self._stage_pad[key] = fn
         return fn
 
+    def _entry_widths(self, tid, batch: int) -> tuple:
+        """Per-dimension (0, pad) widths staging one batched input: bucket
+        zero-fill on the batch dim + planned entry lane pad, fused."""
+        t = self.graph.tensor(tid)
+        phys = self.exec_plan.entry_shape(tid)
+        return ((0, bucket_for(batch) - batch),) + tuple(
+            (0, p - d) for p, d in zip(phys, t.shape))
+
     def _predict_q_batched(self, inputs):
         batch = np.asarray(inputs[0]).shape[0]
-        bucket = bucket_for(batch)
         args = []
         for tid, arr in zip(self.graph.inputs, inputs):
             t = self.graph.tensor(tid)
@@ -223,8 +342,9 @@ class CompiledModel:
             assert a.shape[0] == batch, (
                 f"all inputs must share the batch dim: {a.shape[0]} != {batch}")
             a = jnp.asarray(a)  # H2D of the real rows only
-            if bucket != batch:
-                a = self._bucket_pad(a.shape, bucket - batch)(a)
+            widths = self._entry_widths(tid, batch)
+            if any(w for _, w in widths):
+                a = self._staged_pad(a.shape, widths)(a)
             args.append(a)
         outs = self.compile_batched(batch)(*args)
         outs = tuple(np.asarray(o)[:batch] for o in outs)
@@ -244,8 +364,15 @@ class CompiledModel:
 
     def predict_q_many(self, *inputs, max_batch: Optional[int] = None):
         """Batched ``predict_q`` that splits an arbitrarily large batch into
-        chunks of at most ``max_batch`` rows (each routed through its
-        power-of-two bucket) and concatenates the results.
+        bucket-aligned chunks of at most ``max_batch`` rows and concatenates
+        the results.
+
+        Chunks split on bucket boundaries: a non-power-of-two ``max_batch``
+        is clamped down to ``bucket_floor(max_batch)`` so every full chunk
+        fills its power-of-two bucket exactly instead of padding past it
+        (``max_batch=6`` used to pad every 6-row chunk up to the 8-bucket —
+        wasted lanes on every serving flush). Only the final partial chunk
+        can pad, to its own (smaller) bucket.
 
         This is the serving entry point: a micro-batcher can drain its whole
         queue in one call without AOT-compiling a bucket for every queue
@@ -255,14 +382,19 @@ class CompiledModel:
         arrs = [np.asarray(a) for a in inputs]
         if not self._is_batched(arrs[0]):
             raise ValueError("predict_q_many requires a leading batch dim")
-        batch = arrs[0].shape[0]
-        if max_batch is None or batch <= max_batch:
-            return self.predict_q(*arrs)
-        if max_batch < 1:
+        if max_batch is not None and max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        batch = arrs[0].shape[0]
+        # Split whenever the batch exceeds the largest exactly-fillable
+        # bucket — NOT only when it exceeds max_batch: a serving flush of
+        # max_batch=6 rows must drain as 4+2 exact buckets, never pad its
+        # one chunk up to the 8-bucket.
+        step = None if max_batch is None else bucket_floor(max_batch)
+        if step is None or batch <= step:
+            return self.predict_q(*arrs)
         chunks = []
-        for lo in range(0, batch, max_batch):
-            out = self.predict_q(*(a[lo:lo + max_batch] for a in arrs))
+        for lo in range(0, batch, step):
+            out = self.predict_q(*(a[lo:lo + step] for a in arrs))
             chunks.append(out if isinstance(out, tuple) else (out,))
         outs = tuple(np.concatenate([np.asarray(c[i]) for c in chunks])
                      for i in range(len(chunks[0])))

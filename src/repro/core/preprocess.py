@@ -12,6 +12,14 @@ the host, and activations stay in padded layout across consecutive
 Pallas-routed layers (padding only at graph entry, slicing only at graph
 outputs and non-Pallas boundaries). Without the plan, every kernel call
 pays a pad→slice round trip on its operands.
+
+The plan is **batch-aware**: a leading batch dimension is layout-neutral,
+so the same :class:`OpLayout` objects (same pre-padded weights and folded
+constants, computed once on the host) drive both the single-call trace and
+every batched bucket executable — buckets never re-plan. ``entry_phys``
+records the lane-padded physical shape of each graph input consumed by a
+planned op, which lets the batched engine fuse the bucket zero-fill pad and
+the layout entry pad into one staged device pad outside the trace.
 """
 from __future__ import annotations
 
@@ -120,10 +128,18 @@ class OpLayout:
 @dataclasses.dataclass(frozen=True)
 class LayoutPlan:
     """op index -> OpLayout, plus tensor id -> physical shape for every
-    activation stored in padded layout (all others stay logical)."""
+    activation stored in padded layout (all others stay logical).
+
+    ``phys`` describes the single-call trace (FC activations additionally
+    keep their MXU row padding between ops). ``entry_phys`` maps graph-input
+    tensor ids to their lane-padded per-sample physical shape whenever a
+    planned Pallas op consumes them — the batched engine stages those inputs
+    pre-padded (one fused device pad covers bucket fill + entry lanes), so
+    the batched trace contains no entry pads at all."""
 
     layouts: dict
     phys: dict
+    entry_phys: dict = dataclasses.field(default_factory=dict)
 
 
 def plan_layout(g: G.Graph, folded: dict, paged=None) -> LayoutPlan:
@@ -184,7 +200,19 @@ def plan_layout(g: G.Graph, folded: dict, paged=None) -> LayoutPlan:
         layouts[i] = lay
         if tuple(lay.out_shape) != tuple(y_t.shape):
             phys[op.outputs[0]] = tuple(lay.out_shape)
-    return LayoutPlan(layouts, phys)
+
+    # Graph inputs consumed by a planned op: record the lane-padded entry
+    # layout so the batched path can stage inputs pre-padded (fusing the
+    # bucket zero-fill with the entry lane pad in ONE device pad).
+    entry_phys = {}
+    input_ids = set(g.inputs)
+    for i, lay in layouts.items():
+        tid = g.ops[i].inputs[0]
+        if tid in input_ids:
+            t = g.tensor(tid)
+            if t.shape[-1] != lay.in_lanes:
+                entry_phys[tid] = tuple(t.shape[:-1]) + (lay.in_lanes,)
+    return LayoutPlan(layouts, phys, entry_phys)
 
 
 def _planned_consts(fc: FoldedConsts, n: int, n_pad: int) -> tuple:

@@ -213,10 +213,29 @@ def run_graph_reference(g: G.Graph, inputs) -> dict:
 def _merge_lead2(ctx: OpContext, x, *rest):
     """Fold the batch dim into the op's own leading dim — FC rows, or the
     native NHWC batch of convs/pools — run the normal compiled route, and
-    split back. Exact: both ops are parallel over that dimension."""
+    split back. Exact: both ops are parallel over that dimension.
+
+    ``ctx.layout`` rides along into ``run_compiled``, so planned conv /
+    depthwise ops lower through the same lane-padded kernels (with their
+    ``n_true``/``c_true`` padding-lane zeroing) on the batched trace: the
+    merged dim is the convs' native NHWC batch, which the planned wrappers
+    already handle. The split-back reshape restores the batch dim on the
+    padded physical shape untouched."""
     b, d0 = x.shape[0], x.shape[1]
     y = run_compiled(ctx, (x.reshape((b * d0,) + x.shape[2:]),) + rest)
     return y.reshape((b, d0) + y.shape[1:])
+
+
+def _fc_batched(ctx: OpContext, x, *rest):
+    """Batched FULLY_CONNECTED. With a planned layout the merged (B*m) rows
+    would no longer match the single-call physical row count, so the planned
+    route goes through the batch-aware wrapper (lanes stay padded, rows are
+    aligned and sliced inside); otherwise the batch folds into the row dim
+    exactly as before."""
+    if ctx.layout is not None:
+        from repro.kernels import ops as pallas_ops
+        return pallas_ops.qmatmul_planned_batched(x, ctx.layout)
+    return _merge_lead2(ctx, x, *rest)
 
 
 def _pad_batched(ctx: OpContext, x):
@@ -271,7 +290,7 @@ register(
     lower_compiled=_fc_compiled,
     lower_pallas=_fc_pallas,
     lower_paged=_fc_paged,
-    batched=_merge_lead2,
+    batched=_fc_batched,
     weight_axis=1,
     w_sum_axes=(0,),
     w_count_axes=(0,),

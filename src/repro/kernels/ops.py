@@ -11,7 +11,11 @@ Two families of entry points:
   if it arrives logical, i.e. at graph entry), and the output is *kept*
   padded with its padding lanes zeroed by the kernel. Chained Pallas layers
   therefore stay tile-resident — layout work happens once, at compile time,
-  the MicroFlow/TFLM principle applied to TPU tiling.
+  the MicroFlow/TFLM principle applied to TPU tiling. The planned route is
+  batch-aware: the conv/dwconv wrappers are batch-native (NHWC batch) and
+  ``qmatmul_planned_batched`` merges a leading batch dim into the MXU rows,
+  so the engine's batched bucket executables lower through the same
+  compile-time layouts as the single-call trace.
 
 Both families handle fused-activation bounds, SAME→VALID border pre-padding
 with the input zero point, and interpret-mode selection (interpret=True off
@@ -112,6 +116,35 @@ def qmatmul_planned(x_q, lay):
                        lo=lay.lo, hi=lay.hi,
                        n_true=lay.n_true if np_lanes != lay.n_true else None,
                        interpret=_interpret())
+
+
+def qmatmul_planned_batched(x_q, lay):
+    """Planned-layout FC with one leading batch dimension.
+
+    ``x_q`` is ``(B, m, K)`` logical (non-Pallas producer) or ``(B, m, K')``
+    lane-padded (upstream planned op / fused entry pad); the batch dim is
+    layout-neutral, so the same compile-time ``OpLayout`` serves every
+    bucket. The batch merges into the MXU row dimension; the only trace-time
+    layout work is the row alignment of ``B*m`` (fused with the lane pad
+    when the input arrives logical) — it disappears entirely when ``B*m``
+    is a lane multiple. Output is ``(B, m, N')`` with padding lanes zeroed
+    by the kernel (same ``n_true`` contract as the single-call route)."""
+    b, m = x_q.shape[0], x_q.shape[1]
+    rows = b * m
+    x2 = x_q.reshape(rows, x_q.shape[-1])
+    mp = round_up(rows, LANE)
+    lane_pad = lay.in_lanes - x2.shape[-1]
+    if mp != rows or lane_pad:
+        x2 = jnp.pad(x2, ((0, mp - rows), (0, lane_pad)))
+    np_lanes = lay.out_shape[-1]
+    out = _qm.qmatmul(x2, jnp.asarray(lay.w_phys),
+                      *(jnp.asarray(c) for c in lay.consts),
+                      lo=lay.lo, hi=lay.hi,
+                      n_true=lay.n_true if np_lanes != lay.n_true else None,
+                      interpret=_interpret())
+    if mp != rows:
+        out = out[:rows]
+    return out.reshape(b, m, np_lanes)
 
 
 def fmatmul(x, w):

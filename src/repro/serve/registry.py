@@ -6,9 +6,11 @@ person trio by default), each behind its own
 
 * **Warm-up compilation** — ``register`` builds the ``CompiledModel`` and
   AOT-compiles the batch-1 executable plus every power-of-two bucket up to
-  the model's ``max_batch``, so the first request is as fast as the
-  millionth (all compilation ahead of serving, the MicroFlow discipline
-  applied to the fleet).
+  the model's ``max_batch`` — every bucket lowered from the model's single
+  ``ExecutionPlan``, layout plan included, plus the staged entry pads
+  (fused bucket zero-fill + lane pad) for every batch size below it — so
+  the first request is as fast as the millionth (all compilation ahead of
+  serving, the MicroFlow discipline applied to the fleet).
 * **Admission control** — ``infer`` rejects unknown models (``KeyError``)
   and, once a model's bounded queue is full, sheds the request with
   :class:`QueueFullError` rather than buffering it. Together with the
@@ -144,9 +146,17 @@ class ServingRegistry:
 
 def build_paper_registry(names=("sine", "speech", "person"), *,
                          calib_samples: int = 8, seed: int = 0,
+                         use_pallas: bool = False, layout_plan: bool = True,
                          **registry_kw) -> ServingRegistry:
     """Registry serving the paper's models (Table 3), quantized with
-    calibrated-random representative data exactly as the benchmarks do."""
+    calibrated-random representative data exactly as the benchmarks do.
+
+    ``use_pallas``/``layout_plan`` select the engine route every served
+    bucket lowers through (see ``repro.core.engine.ExecutionPlan``): with
+    ``use_pallas=True`` the warm-up AOT-compiles layout-planned bucket
+    executables — activations stay lane-padded across the whole batched
+    graph — while ``layout_plan=False`` keeps the per-call pad/slice route
+    for A/B comparison (``benchmarks.bench_serve`` records both)."""
     from repro.configs.paper_models import PAPER_MODELS
     from repro.core.quantize import quantize_graph
 
@@ -160,5 +170,7 @@ def build_paper_registry(names=("sine", "speech", "person"), *,
     for name in names:
         g = PAPER_MODELS[name](batch=1)
         rep = [gens[name](rng, 1) for _ in range(calib_samples)]
-        reg.register(name, CompiledModel(quantize_graph(g, rep)))
+        reg.register(name, CompiledModel(quantize_graph(g, rep),
+                                         use_pallas=use_pallas,
+                                         layout_plan=layout_plan))
     return reg

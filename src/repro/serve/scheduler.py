@@ -37,7 +37,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.engine import bucket_for
+from repro.core.engine import bucket_floor, dispatched_bucket_rows
 from .metrics import ModelMetrics
 
 
@@ -149,13 +149,17 @@ class MicroBatcher:
     @classmethod
     def for_model(cls, model, *, warmup: bool = True, **kw) -> "MicroBatcher":
         """Batcher over ``CompiledModel.predict_q_many``. With ``warmup``
-        every power-of-two bucket up to ``max_batch`` is AOT-compiled now,
-        so no request ever pays a compile on the hot path."""
+        every bucket a flush can dispatch is AOT-compiled now, so no request
+        ever pays a compile on the hot path. ``predict_q_many`` chunks on
+        bucket boundaries, so the largest bucket any flush reaches is
+        ``bucket_floor(max_batch)`` — warming ``bucket_for(max_batch)``
+        would compile a top bucket no flush ever uses when ``max_batch``
+        is not a power of two."""
         max_batch = kw.get("max_batch", 32)
         if warmup:
             # only the bucketed batch executables: the batcher always stacks
             # requests, so the unbatched AOT path is never on its hot path
-            model.warmup_batched(max_batch)
+            model.warmup_batched(bucket_floor(max_batch))
         return cls(lambda xs: model.predict_q_many(xs, max_batch=max_batch),
                    **kw)
 
@@ -267,7 +271,11 @@ class MicroBatcher:
                 self.metrics.observe_fail()
             return
         t1 = self.clock.now()
-        self.metrics.observe_batch(take, bucket_for(take), t1 - t0)
+        # bucket rows as actually dispatched: predict_q_many chunks on
+        # bucket boundaries, so occupancy reflects real padding, not the
+        # bucket_for(take) a single un-chunked call would have paid
+        self.metrics.observe_batch(
+            take, dispatched_bucket_rows(take, self.max_batch), t1 - t0)
         for r, y in zip(reqs, ys):
             if not r.future.done():  # caller may have cancelled/timed out
                 r.future.set_result(y)

@@ -1,12 +1,41 @@
 """Smoke test for the benchmark harness: runs the runtime bench in-process
 (--fast --only runtime) so the bench code can't silently rot, and checks the
-machine-readable BENCH_runtime.json contract."""
+machine-readable BENCH_runtime.json contract — plus the tools/check_bench.py
+gate semantics (name regression AND speedup ratios >= 1.0)."""
 import json
+import os
+import subprocess
 import sys
 
 import pytest
 
 from benchmarks import run as bench_run
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_check_bench(tmp_path, baseline: dict, fresh: dict) -> int:
+    b, f = tmp_path / "base.json", tmp_path / "fresh.json"
+    b.write_text(json.dumps(baseline))
+    f.write_text(json.dumps(fresh))
+    return subprocess.run(
+        [sys.executable, os.path.join("tools", "check_bench.py"),
+         str(b), str(f)], cwd=_ROOT, capture_output=True).returncode
+
+
+def test_check_bench_gates_names_and_ratios(tmp_path):
+    speedup = {"runtime/x_speedup": {"ratio": 2.0, "median_us": None}}
+    # all names present, speedup >= 1.0, non-speedup ratios ignored
+    ok = {**speedup,
+          "serve/a_vs_b": {"ratio": 1.0, "median_us": None},
+          "runtime/paging_slowdown_ratio": {"ratio": 0.4, "median_us": None}}
+    assert _run_check_bench(tmp_path, speedup, ok) == 0
+    # a speedup regressing below parity fails even though the name exists
+    bad = {"runtime/x_speedup": {"ratio": 0.8, "median_us": None}}
+    assert _run_check_bench(tmp_path, speedup, bad) == 1
+    # a baseline name disappearing still fails
+    assert _run_check_bench(tmp_path, speedup, {"runtime/other_us":
+                                                {"median_us": 1.0}}) == 1
 
 
 @pytest.mark.slow
@@ -24,6 +53,10 @@ def test_bench_runtime_fast_smoke(tmp_path, monkeypatch, capsys):
 
     doc = json.loads((tmp_path / "BENCH_runtime.json").read_text())
     assert "runtime/person_compiled_pallas_us" in doc
+    # the pallas measurement names its engine route (planned layout);
+    # non-pallas records carry layout_plan=None
+    assert doc["runtime/person_compiled_pallas_us"]["layout_plan"] is True
+    assert doc["runtime/person_compiled_us"]["layout_plan"] is None
     for name, rec in doc.items():
         assert name.startswith("runtime/")
         # every record is a timing, a ratio, or both — never neither
@@ -58,7 +91,15 @@ def test_bench_serve_fast_smoke(tmp_path, monkeypatch, capsys):
         "serve/sine_engine_serial_us", "serve/sine_serial_us",
         "serve/sine_dynamic_per_req_us", "serve/sine_dynamic_vs_serial",
         "serve/sine_poisson_x1_p95_us", "serve/sine_poisson_x2_p95_us",
-        "serve/sine_poisson_x4_p95_us"}
+        "serve/sine_poisson_x4_p95_us",
+        "serve/sine_batched_planned_us", "serve/sine_batched_percall_us",
+        "serve/sine_batched_pads_percall_vs_planned"}
+    # the layout A/B records name their route, and the structural pad-op
+    # ratio is deterministic (per-call route pays 7 pads per FC vs the
+    # planned route's <=1): exactly what tools/check_bench.py gates on
+    assert doc["serve/sine_batched_planned_us"]["layout_plan"] is True
+    assert doc["serve/sine_batched_percall_us"]["layout_plan"] is False
+    assert doc["serve/sine_batched_pads_percall_vs_planned"]["ratio"] >= 7.0
     # dynamic batching must beat serial batch-1 serving. Observed ~6-12x
     # on CPU (the committed BENCH_runtime.json pins the real multiple);
     # this CI-gating assertion only catches "batching stopped helping at

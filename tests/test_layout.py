@@ -9,29 +9,10 @@ import jax
 from repro.core import CompiledModel, Interpreter, build_graph_fn
 from repro.core import graph as G
 from repro.core.builder import GraphBuilder
+from repro.core.introspect import prim_counts as _prim_counts
 from repro.core.preprocess import plan_layout, preprocess_graph
 from repro.core.quantize import quantize_graph
 from repro.configs.paper_models import build_person
-
-
-def _prim_counts(fn, *specs):
-    """Primitive-name -> count over the jaxpr of fn, recursing into nested
-    jaxprs (jit-wrapped kernels, pallas_call bodies)."""
-    counts = {}
-
-    def walk(jx):
-        for eq in jx.eqns:
-            counts[eq.primitive.name] = counts.get(eq.primitive.name, 0) + 1
-            for v in eq.params.values():
-                vs = v if isinstance(v, (tuple, list)) else [v]
-                for u in vs:
-                    if isinstance(u, jax.core.ClosedJaxpr):
-                        walk(u.jaxpr)
-                    elif isinstance(u, jax.core.Jaxpr):
-                        walk(u)
-
-    walk(jax.make_jaxpr(fn)(*specs).jaxpr)
-    return counts
 
 
 def _mlp(rng):

@@ -83,6 +83,32 @@ def test_bucket_full_flush_no_time_passes():
     run(body())
 
 
+def test_nonpow2_flush_occupancy_counts_dispatched_buckets():
+    """A full max_batch=6 flush drains through predict_q_many as exact 4+2
+    buckets, so metrics account 6 bucket rows (occupancy 1.0) — not the
+    8-bucket a single un-chunked call would have padded to (and which
+    warm-up deliberately never compiles)."""
+    async def body():
+        clock = FakeClock()
+        record = []
+        async with make_batcher(record, clock, max_batch=6,
+                                max_queue=16) as b:
+            futs = [b.submit(np.float32([i])) for i in range(6)]
+            await clock.drain()
+            assert record == [6]
+            snap = b.metrics.snapshot(clock.now())
+            assert snap["batch_occupancy"] == 1.0
+            assert all(f.done() for f in futs)
+            # a 3-request deadline flush still pads to its own 4-bucket
+            for i in range(3):
+                b.submit(np.float32([i]))
+            await clock.advance(0.010)
+            assert record == [6, 3]
+            snap = b.metrics.snapshot(clock.now())
+            assert snap["batch_occupancy"] == pytest.approx(9 / 10)
+    run(body())
+
+
 def test_oversized_burst_splits_into_bucket_flushes():
     async def body():
         clock = FakeClock()

@@ -2,7 +2,10 @@
 # Full local/CI gate:
 #   1. tier-1 test suite (ROADMAP.md contract)
 #   2. fast benchmark run -> fresh BENCH json
-#   3. bench-name regression check against the committed baseline
+#   3. bench regression check against the committed baseline:
+#      record names must all still be produced AND every speedup ratio
+#      (*_speedup / *_vs_* records) must stay >= 1.0 — a layout or
+#      batching regression fails the Actions gate here
 #
 #   tools/check.sh [--skip-tests]
 set -euo pipefail
@@ -20,7 +23,7 @@ fresh="$(mktemp -t BENCH_check.XXXXXX.json)"
 trap 'rm -f "$fresh"' EXIT
 python -m benchmarks.run --fast --json-out "$fresh"
 
-echo "== bench-name regression check =="
+echo "== bench regression check (names + speedup ratios >= 1.0) =="
 python tools/check_bench.py BENCH_runtime.json "$fresh"
 
 echo "check.sh: all gates passed"

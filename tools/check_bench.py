@@ -1,10 +1,20 @@
-"""Bench-name regression gate: every record name in the committed
-BENCH_runtime.json baseline must still be produced by a fresh run.
+"""Bench regression gate, two checks per run:
 
-A disappearing name means a benchmark silently stopped measuring something
-(a renamed record, a dropped code path) — exactly the kind of rot a perf
-trajectory tracked across PRs cannot absorb. New names are fine (benches
-grow); missing names fail.
+1. **Name regression** — every record name in the committed
+   BENCH_runtime.json baseline must still be produced by a fresh run.
+   A disappearing name means a benchmark silently stopped measuring
+   something (a renamed record, a dropped code path) — exactly the kind of
+   rot a perf trajectory tracked across PRs cannot absorb. New names are
+   fine (benches grow); missing names fail.
+
+2. **Ratio regression** — every *speedup* record in the fresh run (name
+   containing ``_speedup`` or ``_vs_``) must keep ``ratio >= 1.0``. These
+   records are the headline claims of the trajectory (compiled vs
+   interpreter, dynamic batching vs serial, planned vs per-call layout);
+   a ratio dipping below parity means the optimization regressed into a
+   pessimization, which must fail the gate even though the record name
+   still exists. Dimensionless records that are *expected* below 1.0
+   (paging slowdowns) use other naming and are not gated.
 
   python tools/check_bench.py BASELINE.json FRESH.json
 """
@@ -13,26 +23,53 @@ from __future__ import annotations
 import json
 import sys
 
+SPEEDUP_MARKERS = ("_speedup", "_vs_")
+
+
+def ratio_violations(doc: dict) -> list:
+    """(name, ratio) pairs for speedup-named records with ratio < 1.0."""
+    bad = []
+    for name, rec in sorted(doc.items()):
+        if not any(m in name for m in SPEEDUP_MARKERS):
+            continue
+        ratio = rec.get("ratio") if isinstance(rec, dict) else None
+        if ratio is not None and ratio < 1.0:
+            bad.append((name, ratio))
+    return bad
+
 
 def main(baseline_path: str, fresh_path: str) -> int:
     with open(baseline_path) as f:
         baseline = set(json.load(f))
     with open(fresh_path) as f:
-        fresh = set(json.load(f))
+        fresh_doc = json.load(f)
+    fresh = set(fresh_doc)
     missing = sorted(baseline - fresh)
     added = sorted(fresh - baseline)
     if added:
         print(f"check_bench: {len(added)} new record(s): "
               + ", ".join(added))
+    rc = 0
     if missing:
         print(f"check_bench: FAIL — {len(missing)} baseline record(s) "
               f"missing from the fresh run:", file=sys.stderr)
         for name in missing:
             print(f"  - {name}", file=sys.stderr)
-        return 1
-    print(f"check_bench: OK — all {len(baseline)} baseline names present "
-          f"({len(fresh)} total)")
-    return 0
+        rc = 1
+    bad_ratios = ratio_violations(fresh_doc)
+    if bad_ratios:
+        print(f"check_bench: FAIL — {len(bad_ratios)} speedup record(s) "
+              f"regressed below 1.0x:", file=sys.stderr)
+        for name, ratio in bad_ratios:
+            print(f"  - {name} = {ratio:.3f}x", file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        n_gated = sum(1 for n in fresh
+                      if any(m in n for m in SPEEDUP_MARKERS))
+        print(f"check_bench: OK — all {len(baseline)} baseline names "
+              f"present ({len(fresh)} total), {n_gated} speedup ratio(s) "
+              f">= 1.0")
+    return rc
 
 
 if __name__ == "__main__":
