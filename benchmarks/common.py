@@ -32,7 +32,7 @@ def median_time_us(fn, iters: int = 100, warmup: int = 3):
 
 
 def csv_line(name: str, us=None, derived: str = "", ci=None,
-             ratio=None, layout_plan=None) -> str:
+             ratio=None, layout_plan=None, slo_attainment=None) -> str:
     """Print one CSV line and keep a structured record of it.
 
     ``us`` is the record's timing (``median_us``); pass ``None`` for
@@ -43,6 +43,9 @@ def csv_line(name: str, us=None, derived: str = "", ci=None,
     ``True`` for the compile-time planned-layout route, ``False`` for the
     per-call pad/slice route, ``None`` when no Pallas layout is involved —
     so planned-vs-per-call numbers are distinguishable in the trajectory.
+    ``slo_attainment`` is a ``{priority_class: attained_fraction}`` dict
+    for mixed-priority serving records — ``tools/check_bench.py`` fails a
+    ``*_slo`` record whose per-class attainment went missing.
 
     Every record also captures ``jax.default_backend()`` and whether the
     Pallas kernels run in interpret mode (CPU fallback), so committed
@@ -59,6 +62,9 @@ def csv_line(name: str, us=None, derived: str = "", ci=None,
                     "backend": backend,
                     "pallas_interpret": interpret_mode(),
                     "layout_plan": layout_plan,
+                    "slo_attainment": (None if slo_attainment is None else
+                                       {str(k): float(v) for k, v in
+                                        slo_attainment.items()}),
                     "derived": derived})
     return line
 

@@ -72,7 +72,8 @@ def main() -> None:
                                 "ci95": r["ci95"], "ratio": r["ratio"],
                                 "backend": r["backend"],
                                 "pallas_interpret": r["pallas_interpret"],
-                                "layout_plan": r["layout_plan"]}
+                                "layout_plan": r["layout_plan"],
+                                "slo_attainment": r["slo_attainment"]}
                     for r in common.RECORDS
                     if r["name"].startswith(json_prefixes)})
         with open(args.json_out, "w") as f:

@@ -1,8 +1,19 @@
-"""Serve the paper's TinyML models behind the dynamic micro-batcher.
+"""Serve the paper's TinyML models behind the pipelined micro-batcher.
 
-Starts a multi-model ServingRegistry (sine + speech by default), fires a
-burst of concurrent single-sample requests at it, and prints the per-model
-metrics snapshot — latency percentiles, throughput, and batch occupancy
+Starts a multi-model ServingRegistry (sine + speech by default) with:
+
+* a **shared off-loop executor** — one ThreadPoolExecutorBackend carries
+  every model's flushes, so speech's multi-ms conv call never blocks
+  sine's arrival processing (and vice versa);
+* **two priority classes** — ``interactive`` (priority 1, 1 ms coalescing
+  deadline, 25 ms SLO) and ``batch`` (priority 0, 10 ms deadline): under
+  overload the scheduler sheds batch-class requests first (preempting
+  pending ones in interactive's favor), and earliest-deadline-first flush
+  order lets interactive rows jump the queue into the next bucket.
+
+A mixed burst of concurrent single-sample requests is fired at both
+models, then the per-model metrics snapshot is printed — per-class
+latency percentiles, SLO attainment, preemptions, and batch occupancy
 (how full the power-of-two AOT buckets ran).
 
   PYTHONPATH=src python examples/serve_tinyml.py [n_requests]
@@ -12,45 +23,66 @@ import sys
 
 import numpy as np
 
-from repro.serve.registry import build_paper_registry
+from repro.serve.executor import ThreadPoolExecutorBackend
+from repro.serve.registry import ClassPolicy, build_paper_registry
 from repro.serve.scheduler import QueueFullError
+
+CLASSES = {
+    "interactive": ClassPolicy(priority=1, max_delay_s=0.001, slo_s=0.025),
+    "batch": ClassPolicy(priority=0, max_delay_s=0.010, slo_s=0.250),
+}
 
 
 async def main(n_requests: int = 256):
     rng = np.random.default_rng(0)
     # person's warm-up compile is slow on CPU; two models show the story.
-    reg = build_paper_registry(("sine", "speech"), max_batch=16,
-                               max_delay_s=0.002, max_queue=128)
+    # The registry owns the shared executor and closes it on stop().
+    reg = build_paper_registry(
+        ("sine", "speech"), max_batch=16, max_delay_s=0.002, max_queue=128,
+        executor=ThreadPoolExecutorBackend(max_workers=2), classes=CLASSES)
 
     async with reg:
         # Concurrent clients: every request is an independent single sample
         # -- the batcher, not the client, assembles the big device batches.
-        async def client(model, x):
+        # Interactive requests take priority; batch requests shed first.
+        async def client(model, x, cls):
             try:
-                yq = await reg.infer(model, reg.quantize_input(model, x))
+                yq = await reg.infer(model, reg.quantize_input(model, x),
+                                     cls=cls)
                 return reg.dequantize_output(model, yq)
-            except QueueFullError:
-                return None  # load shed by admission control
+            except QueueFullError:  # shed OR preempted by a higher class
+                return None
 
         jobs = []
         for i in range(n_requests):
+            cls = "interactive" if i % 3 == 0 else "batch"
             if i % 2 == 0:
-                jobs.append(client("sine", rng.uniform(0, 2 * np.pi, (1,))))
+                jobs.append(client("sine",
+                                   rng.uniform(0, 2 * np.pi, (1,)), cls))
             else:
-                jobs.append(client("speech", rng.normal(0, 1, (49, 40, 1))))
+                jobs.append(client("speech",
+                                   rng.normal(0, 1, (49, 40, 1)), cls))
         results = await asyncio.gather(*jobs)
         done = sum(r is not None for r in results)
         print(f"{done}/{n_requests} served "
-              f"({n_requests - done} shed by backpressure)\n")
+              f"({n_requests - done} shed by backpressure/priority)\n")
 
         for model, snap in reg.snapshot().items():
             print(f"[{model}]")
-            for k in ("completed", "rejected", "batches", "mean_batch",
-                      "batch_occupancy", "throughput_rps", "p50_ms",
-                      "p95_ms", "p99_ms"):
+            for k in ("completed", "rejected", "preempted", "cancelled",
+                      "batches", "mean_batch", "batch_occupancy",
+                      "throughput_rps", "p50_ms", "p95_ms", "p99_ms"):
                 v = snap[k]
                 s = f"{v:.3f}" if isinstance(v, float) else str(v)
                 print(f"  {k:16s} {s}")
+            for cls, c in snap["classes"].items():
+                att = ("n/a" if c["slo_attainment"] is None
+                       else f"{c['slo_attainment']:.2f}")
+                p95 = ("n/a" if c["p95_ms"] is None
+                       else f"{c['p95_ms']:.3f}")
+                print(f"  class {cls:12s} completed={c['completed']:<4d} "
+                      f"preempted={c['preempted']:<3d} p95_ms={p95} "
+                      f"slo_attainment={att}")
             print()
 
     # sanity: batched serving matches direct batch-1 inference

@@ -49,6 +49,7 @@ many concurrent requests without per-size recompilation.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Optional
 
 import jax
@@ -195,7 +196,24 @@ def dispatched_bucket_rows(batch: int, max_batch: Optional[int] = None) -> int:
 
 
 class CompiledModel:
-    """The user-facing ``predict()`` the paper's ``model`` macro generates."""
+    """The user-facing ``predict()`` the paper's ``model`` macro generates.
+
+    Thread-safety: executing the AOT executables (``predict_q`` /
+    ``predict_q_many``) is safe from any number of threads — XLA
+    executables are immutable once compiled and JAX dispatch is
+    thread-safe. What is NOT naturally safe is *cache fill*: the bucket
+    executable cache (``_batched_aot``), the staged-pad cache
+    (``_stage_pad``), and the per-call AOT slot (``_aot``) are plain
+    dicts/attributes mutated on miss. All three fill under one
+    ``_compile_lock`` with double-checked lookups, so concurrent
+    ``predict_q_many`` calls on a cold bucket compile it exactly once
+    (the loser of the race reuses the winner's executable) and a
+    half-built entry is never visible. The lock is held across the XLA
+    compile — a deliberate choice: duplicate multi-second compiles waste
+    more than brief convoying, and the serving path avoids the question
+    entirely by warming every bucket via ``warmup_batched`` before
+    traffic (the paper's everything-at-compile-time rule). Reads on the
+    warm path stay lock-free."""
 
     def __init__(self, g: G.Graph, use_pallas: bool = False,
                  paged: Optional[dict] = None, layout_plan: bool = True):
@@ -205,6 +223,7 @@ class CompiledModel:
         self._aot = None
         self._batched_aot = {}  # bucket size -> AOT executable
         self._stage_pad = {}    # (shape, widths) -> jitted device-side pad
+        self._compile_lock = threading.Lock()  # guards all cache fills
 
     # Everything compile-time lives in the ExecutionPlan; these read-only
     # views keep the established attribute API without a second copy that
@@ -236,8 +255,11 @@ class CompiledModel:
 
     # -- AOT compilation (Fig. 2's "Target Binary") -----------------------
     def compile(self):
-        lowered = self._fn.lower(*self._input_specs())
-        self._aot = lowered.compile()
+        if self._aot is None:
+            with self._compile_lock:
+                if self._aot is None:  # double-checked: compile-once under
+                    lowered = self._fn.lower(*self._input_specs())  # racing
+                    self._aot = lowered.compile()                   # callers
         return self._aot
 
     def compile_batched(self, batch: int):
@@ -253,20 +275,24 @@ class CompiledModel:
         bucket = bucket_for(batch)
         exe = self._batched_aot.get(bucket)
         if exe is None:
-            donate = (tuple(range(len(self.graph.inputs)))
-                      if jax.default_backend() != "cpu" else ())
-            fn = jax.jit(self.exec_plan.lower(batched=True),
-                         donate_argnums=donate)
-            exe = fn.lower(*self.exec_plan.batched_input_specs(bucket)) \
-                    .compile()
-            self._batched_aot[bucket] = exe
+            with self._compile_lock:  # compile-on-miss races resolve to one
+                exe = self._batched_aot.get(bucket)  # compile per bucket
+                if exe is None:
+                    donate = (tuple(range(len(self.graph.inputs)))
+                              if jax.default_backend() != "cpu" else ())
+                    fn = jax.jit(self.exec_plan.lower(batched=True),
+                                 donate_argnums=donate)
+                    exe = fn.lower(
+                        *self.exec_plan.batched_input_specs(bucket)).compile()
+                    self._batched_aot[bucket] = exe
         return exe
 
     def bucket_sizes(self) -> tuple:
         """Batch buckets with a compiled-and-cached AOT executable, sorted.
         The serving scheduler warms these up front so no request pays a
         compile on the hot path."""
-        return tuple(sorted(self._batched_aot))
+        with self._compile_lock:  # stable view while another thread fills
+            return tuple(sorted(self._batched_aot))
 
     def warmup_batched(self, max_batch: int):
         """Ahead-of-serving warm-up: AOT-compile every power-of-two bucket
@@ -321,8 +347,11 @@ class CompiledModel:
         key = (tuple(shape), tuple(widths))
         fn = self._stage_pad.get(key)
         if fn is None:
-            fn = jax.jit(lambda a: jnp.pad(a, widths))
-            self._stage_pad[key] = fn
+            with self._compile_lock:
+                fn = self._stage_pad.get(key)
+                if fn is None:
+                    fn = jax.jit(lambda a: jnp.pad(a, widths))
+                    self._stage_pad[key] = fn
         return fn
 
     def _entry_widths(self, tid, batch: int) -> tuple:

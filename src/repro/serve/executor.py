@@ -1,0 +1,116 @@
+"""Inference executors — the dispatch stage of the serving pipeline.
+
+The scheduler (``repro.serve.scheduler.MicroBatcher``) owns admission,
+priority classes, and deadline-driven coalescing; *where the coalesced
+batch actually runs* is this module's job. Splitting the two stages is the
+serving-scale version of MicroFlow's compile-time/runtime split: the
+scheduling stage stays a straight line on the event loop, and the device
+call — the only part with real latency — is behind a swappable backend:
+
+* :class:`InlineExecutor` — runs the flush synchronously on the event
+  loop, exactly the pre-pipeline behavior. Deterministic under
+  ``FakeClock`` (no threads, no real time), so every scheduling-semantics
+  test pins behavior with zero real sleeps. This is the default.
+* :class:`ThreadPoolExecutorBackend` — runs flushes on worker threads via
+  ``loop.run_in_executor``. While a batch is on device the event loop
+  keeps admitting and coalescing, so arrivals pipeline into the *next*
+  batch instead of queueing behind the current one; with ``max_workers >
+  1`` flushes from several models in a ``ServingRegistry`` interleave on
+  one shared pool (one pool ≈ one accelerator's submission streams).
+  Requires the model call to be thread-safe — ``CompiledModel`` locks its
+  AOT-cache fills precisely so concurrent ``predict_q_many`` calls are
+  safe (see ``repro.core.engine``).
+
+Executors never own scheduling state: the batcher counts in-flight rows
+(the joint ``pending + in_flight`` bound) and distributes rows back to
+request futures; ``run`` is just "execute this callable with this batch,
+somewhere".
+"""
+from __future__ import annotations
+
+import asyncio
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Optional
+
+
+class InferenceExecutor:
+    """Backend interface: ``run`` executes one flush's ``infer(xs)``.
+
+    ``inline`` advertises whether ``run`` completes synchronously on the
+    calling (event-loop) thread — the scheduler uses it to keep the
+    deterministic fast path free of task hops, and tests use it to pin
+    FakeClock semantics. ``close`` releases backend resources and is
+    idempotent; a closed backend refuses further dispatches.
+    """
+
+    inline = True
+
+    async def run(self, infer: Callable, xs):
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class InlineExecutor(InferenceExecutor):
+    """Run the flush on the event loop (the pre-pipeline default).
+
+    The call blocks the loop for its duration — for TinyML-scale graphs
+    the call *is* the work, and on-loop execution is what makes FakeClock
+    scheduling tests exact. The scheduler special-cases ``inline`` so this
+    path never even creates a task; ``run`` exists so code written against
+    the interface still works.
+    """
+
+    inline = True
+
+    async def run(self, infer: Callable, xs):
+        return infer(xs)
+
+
+class ThreadPoolExecutorBackend(InferenceExecutor):
+    """Run flushes on a thread pool so inference overlaps scheduling.
+
+    The pool is created lazily on first dispatch (constructing a backend
+    is free) and bounded: ``max_workers`` is the number of flushes that
+    can be *on device* at once — everything else about memory is already
+    bounded by each batcher's joint ``pending + in_flight`` cap, so the
+    pool's internal queue cannot grow past the registered batchers'
+    ``max_queue`` sum. One backend can be shared by every model in a
+    ``ServingRegistry``; with ``max_workers=1`` flushes from all models
+    serialize in dispatch order (one submission stream), while larger
+    pools interleave them.
+    """
+
+    inline = False
+
+    def __init__(self, max_workers: int = 2,
+                 thread_name_prefix: str = "repro-serve"):
+        assert max_workers >= 1
+        self._max_workers = max_workers
+        self._prefix = thread_name_prefix
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._closed = False
+
+    @property
+    def max_workers(self) -> int:
+        return self._max_workers
+
+    async def run(self, infer: Callable, xs):
+        if self._closed:
+            raise RuntimeError("executor is closed")
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._max_workers,
+                thread_name_prefix=self._prefix)
+        loop = asyncio.get_running_loop()
+        return await loop.run_in_executor(self._pool, infer, xs)
+
+    def close(self) -> None:
+        """Idempotent; waits for in-flight flushes so no batch is dropped
+        mid-device-call (batcher ``close`` already awaited its flights —
+        this is the backstop for direct executor users)."""
+        self._closed = True
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None

@@ -11,13 +11,23 @@ person trio by default), each behind its own
   (fused bucket zero-fill + lane pad) for every batch size below it — so
   the first request is as fast as the millionth (all compilation ahead of
   serving, the MicroFlow discipline applied to the fleet).
-* **Admission control** — ``infer`` rejects unknown models (``KeyError``)
-  and, once a model's bounded queue is full, sheds the request with
-  :class:`QueueFullError` rather than buffering it. Together with the
-  engine's static buffers this keeps resident memory flat under overload.
+* **Shared dispatch stage** — the registry can hand every batcher one
+  :class:`repro.serve.executor.InferenceExecutor`. With the default
+  ``InlineExecutor`` flushes run on the event loop (deterministic); with a
+  shared ``ThreadPoolExecutorBackend`` flushes from *all* models
+  interleave on one worker pool, so one model's device call no longer
+  blocks another model's arrival processing. The registry owns the
+  executor's lifecycle: ``stop()`` closes it after the batchers drain.
+* **Admission control** — ``infer``/``submit`` reject unknown models
+  (``KeyError``) and route each request through its model's priority
+  classes: at capacity the batcher sheds by priority (lowest-priority
+  pending request evicted with ``PreemptedError``) or refuses the
+  newcomer with :class:`QueueFullError`. Together with the engine's
+  static buffers and the joint ``pending + in_flight`` bound this keeps
+  resident memory flat under overload.
 * **Metrics** — per-model :class:`repro.serve.metrics.ModelMetrics`
-  snapshots (p50/p95/p99 latency, throughput, batch occupancy) via
-  :meth:`snapshot`.
+  snapshots (p50/p95/p99 latency, throughput, batch occupancy, per-class
+  SLO attainment) via :meth:`snapshot`.
 """
 from __future__ import annotations
 
@@ -27,8 +37,10 @@ from typing import Optional
 import numpy as np
 
 from repro.core import CompiledModel
+from .executor import InferenceExecutor  # noqa: F401  (re-export)
 from .metrics import ModelMetrics
-from .scheduler import Clock, MicroBatcher, QueueFullError  # noqa: F401
+from .scheduler import (Clock, ClassPolicy, MicroBatcher,  # noqa: F401
+                        PreemptedError, QueueFullError)
 
 
 @dataclasses.dataclass
@@ -39,13 +51,22 @@ class _Entry:
 
 
 class ServingRegistry:
-    """Named compiled models, each behind a dynamic micro-batcher."""
+    """Named compiled models, each behind a dynamic micro-batcher.
+
+    ``executor`` (optional) is shared by every registered model's batcher
+    and closed by :meth:`stop`; ``classes`` (optional ``{name:
+    ClassPolicy}``) is the default priority-class table each batcher
+    starts from — both can be overridden per model in :meth:`register`.
+    """
 
     def __init__(self, *, clock: Optional[Clock] = None, max_batch: int = 32,
-                 max_delay_s: float = 0.002, max_queue: int = 256):
+                 max_delay_s: float = 0.002, max_queue: int = 256,
+                 executor: Optional[InferenceExecutor] = None,
+                 classes: Optional[dict] = None):
         self.clock = clock or Clock()
+        self.executor = executor
         self._defaults = dict(max_batch=max_batch, max_delay_s=max_delay_s,
-                              max_queue=max_queue)
+                              max_queue=max_queue, classes=classes)
         self._entries: dict = {}
         self._started = False
         self._stopped = False
@@ -55,10 +76,11 @@ class ServingRegistry:
                  warmup: bool = True, **overrides) -> CompiledModel:
         """Admit ``model`` (an int8 ``CompiledModel``) under ``name``.
         ``overrides`` replace the registry-level batcher defaults
-        (``max_batch`` / ``max_delay_s`` / ``max_queue``) for this model."""
+        (``max_batch`` / ``max_delay_s`` / ``max_queue`` / ``classes`` /
+        ``executor``) for this model."""
         if name in self._entries:
             raise ValueError(f"model {name!r} already registered")
-        kw = {**self._defaults, **overrides}
+        kw = {**self._defaults, "executor": self.executor, **overrides}
         batcher = MicroBatcher.for_model(
             model, warmup=warmup, name=name, clock=self.clock,
             metrics=ModelMetrics(now=self.clock.now()), **kw)
@@ -83,12 +105,21 @@ class ServingRegistry:
         return self
 
     async def stop(self, drain: bool = True) -> None:
-        """Terminal: drains (or cancels) every batcher and shuts the
+        """Terminal: drains (or cancels) every batcher, closes every
+        executor handed to the registry (the registry-level one AND any
+        per-model ``register(..., executor=...)`` override — handing an
+        executor to the registry transfers ownership), and shuts the
         registry down for good — serving again means building a new
         registry (warm-ups are per-``CompiledModel``, so the models
         themselves can be re-registered cheaply)."""
         for e in self._entries.values():
             await e.batcher.close(drain=drain)
+        owned = {id(self.executor): self.executor} \
+            if self.executor is not None else {}
+        for e in self._entries.values():  # per-model overrides included;
+            owned[id(e.batcher.executor)] = e.batcher.executor  # close()
+        for ex in owned.values():         # is idempotent and a no-op for
+            ex.close()                    # InlineExecutor
         self._started = False
         self._stopped = True
 
@@ -106,17 +137,22 @@ class ServingRegistry:
             raise KeyError(f"unknown model {name!r}; "
                            f"registered: {sorted(self._entries)}") from None
 
-    def submit(self, name: str, x):
-        """Admission-controlled enqueue; returns the request's future.
-        Raises ``KeyError`` for unregistered models, ``QueueFullError``
-        when the model's bounded queue sheds the request."""
+    def submit(self, name: str, x, cls: str = "default",
+               deadline_s: Optional[float] = None):
+        """Admission-controlled enqueue under priority class ``cls``;
+        returns the request's future. Raises ``KeyError`` for
+        unregistered models or unknown classes, ``QueueFullError`` when
+        the model's bounded queue sheds the request (a lower-priority
+        pending request may be preempted in its favor instead)."""
         if not self._started:
             raise RuntimeError("registry not started (use `async with` "
                                "or call start())")
-        return self._entry(name).batcher.submit(x)
+        return self._entry(name).batcher.submit(x, cls=cls,
+                                                deadline_s=deadline_s)
 
-    async def infer(self, name: str, x):
-        return await self.submit(name, x)
+    async def infer(self, name: str, x, cls: str = "default",
+                    deadline_s: Optional[float] = None):
+        return await self.submit(name, x, cls=cls, deadline_s=deadline_s)
 
     # -- dtype helpers (requests travel in graph dtype) --------------------
     def quantize_input(self, name: str, x):
@@ -156,7 +192,10 @@ def build_paper_registry(names=("sine", "speech", "person"), *,
     ``use_pallas=True`` the warm-up AOT-compiles layout-planned bucket
     executables — activations stay lane-padded across the whole batched
     graph — while ``layout_plan=False`` keeps the per-call pad/slice route
-    for A/B comparison (``benchmarks.bench_serve`` records both)."""
+    for A/B comparison (``benchmarks.bench_serve`` records both).
+    ``registry_kw`` reaches :class:`ServingRegistry` — including
+    ``executor`` (shared off-loop dispatch) and ``classes`` (priority
+    table)."""
     from repro.configs.paper_models import PAPER_MODELS
     from repro.core.quantize import quantize_graph
 

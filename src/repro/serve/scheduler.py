@@ -1,24 +1,41 @@
-"""Dynamic micro-batching scheduler for the compiled TinyML engine.
+"""Pipelined micro-batching scheduler for the compiled TinyML engine.
 
 MicroFlow wins by moving everything expensive to compile time; the engine's
-batched path (PR 1) extends that to serving — one AOT executable per
-power-of-two batch bucket. What's missing between "a stream of independent
-single-sample requests" and "large batches that make those executables pay
-off" is a scheduler. This module provides it:
+batched path extends that to serving — one AOT executable per power-of-two
+batch bucket. Between "a stream of independent single-sample requests" and
+"large batches that make those executables pay off" sits this module, now a
+two-stage pipeline:
 
-* ``MicroBatcher`` — an asyncio request queue with a deadline-driven
-  coalescer. Requests accumulate until either (a) the queue reaches
-  ``max_batch`` (bucket-full flush: the batch exactly fills the largest
-  warmed bucket) or (b) the oldest request has waited ``max_delay_s``
-  (deadline flush: bounded p95 even at low load). A flush drains up to
-  ``max_batch`` requests, stacks them into one device call through
-  ``CompiledModel.predict_q_many`` (which splits oversized drains across
-  buckets), and distributes rows back to per-request futures.
-* Backpressure: the queue is bounded by ``max_queue``. When full,
-  ``submit`` raises :class:`QueueFullError` instead of buffering — load is
-  shed at admission, so resident memory stays static under any offered
-  load. This is the serving-scale analogue of the paper's static-memory
-  guarantee (Sec. 4.1): no structure in the serving path grows with load.
+* **Scheduling stage** (this module): admission, priority classes, and
+  deadline-driven coalescing. Each request is admitted under a
+  :class:`ClassPolicy` (priority + per-class ``max_delay_s`` + optional
+  ``slo_s`` latency target) and carries an absolute deadline; the pending
+  set is a priority queue ordered **earliest-deadline-first**, so a flush
+  drains the most urgent requests regardless of arrival order, and the
+  flush timer always tracks the earliest pending deadline (a late-arriving
+  interactive request pulls the flush forward past older batch-class
+  requests' laxer deadlines).
+* **Dispatch stage** (:mod:`repro.serve.executor`): *where* the coalesced
+  batch runs. The default :class:`~repro.serve.executor.InlineExecutor`
+  executes on the event loop — deterministic under :class:`FakeClock`,
+  bit-for-bit the original behavior. With a
+  :class:`~repro.serve.executor.ThreadPoolExecutorBackend` the flush runs
+  on a worker thread while the loop keeps admitting and coalescing, so
+  arrivals pipeline into the *next* batch while the current one is on
+  device; a shared backend interleaves flushes from every model in a
+  ``ServingRegistry``.
+
+* **Backpressure, jointly bounded**: admission enforces
+  ``pending + in_flight_rows <= max_queue`` — the static-memory guarantee
+  (paper Sec. 4.1) at serving scale now covers rows queued *and* rows on
+  device, so off-loop dispatch cannot grow resident state past the same
+  bound the inline path had. At capacity the scheduler **sheds by
+  priority**: if some pending request has strictly lower priority than the
+  newcomer, the least urgent such victim (lowest priority, latest
+  deadline) is evicted — its future gets :class:`PreemptedError` — and the
+  newcomer is admitted; otherwise the newcomer is refused with
+  :class:`QueueFullError` (same-priority traffic keeps the original
+  shed-at-tail behavior).
 * ``Clock`` / ``FakeClock`` — every time read and every timed wait goes
   through an injected clock, so tests drive the batcher deterministically
   (virtual time, zero real sleeps) while production uses the monotonic
@@ -31,6 +48,7 @@ from __future__ import annotations
 
 import asyncio
 import contextlib
+import dataclasses
 import heapq
 import time
 from typing import Callable, Optional
@@ -38,7 +56,10 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.engine import bucket_floor, dispatched_bucket_rows
+from .executor import InferenceExecutor, InlineExecutor
 from .metrics import ModelMetrics
+
+DEFAULT_CLASS = "default"
 
 
 class QueueFullError(RuntimeError):
@@ -52,6 +73,43 @@ class QueueFullError(RuntimeError):
         super().__init__(f"{name}: queue full ({depth} pending), load shed")
         self.model = name
         self.depth = depth
+
+
+class PreemptedError(QueueFullError):
+    """A pending request was evicted by shed-by-priority admission.
+
+    Set on the *victim's* future when a higher-priority newcomer claims
+    its queue slot. Subclasses :class:`QueueFullError` so callers already
+    handling shed load handle preemption the same way — including the
+    base class's ``model``/``depth`` attributes.
+    """
+
+    def __init__(self, name: str, cls: str, depth: int):
+        RuntimeError.__init__(
+            self, f"{name}: request (class {cls!r}) preempted by "
+                  f"higher-priority admission ({depth} pending)")
+        self.model = name
+        self.cls = cls
+        self.depth = depth
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassPolicy:
+    """Admission/scheduling policy for one priority class.
+
+    * ``priority`` — higher sheds later: under overload the lowest
+      priority pending request is evicted first.
+    * ``max_delay_s`` — this class's coalescing deadline (how long a
+      request may wait for batchmates); ``None`` inherits the batcher's
+      default.
+    * ``slo_s`` — optional end-to-end latency target; per-class SLO
+      attainment (fraction of completed requests meeting it) is reported
+      in ``ModelMetrics.snapshot()["classes"]``.
+    """
+
+    priority: int = 0
+    max_delay_s: Optional[float] = None
+    slo_s: Optional[float] = None
 
 
 class Clock:
@@ -109,12 +167,28 @@ class FakeClock(Clock):
 
 
 class _Request:
-    __slots__ = ("x", "future", "t")
+    """One pending request: EDF heap entry (deadline, then arrival seq).
 
-    def __init__(self, x, future, t):
+    ``dead`` marks lazy heap deletion — preempted entries stay in the heap
+    until a pop or peek skips past them, so eviction is O(n) scan + O(1)
+    mark, never a heap rebuild.
+    """
+
+    __slots__ = ("x", "future", "t", "cls", "priority", "deadline", "seq",
+                 "dead")
+
+    def __init__(self, x, future, t, cls, priority, deadline, seq):
         self.x = x
         self.future = future
         self.t = t
+        self.cls = cls
+        self.priority = priority
+        self.deadline = deadline
+        self.seq = seq
+        self.dead = False
+
+    def __lt__(self, other: "_Request") -> bool:
+        return (self.deadline, self.seq) < (other.deadline, other.seq)
 
 
 class MicroBatcher:
@@ -123,15 +197,26 @@ class MicroBatcher:
     ``infer`` is a blocking callable mapping a stacked ``(n, ...)`` input
     array to ``(n, ...)`` output rows; :meth:`for_model` builds one from a
     ``CompiledModel`` via ``predict_q_many`` and warms its batch buckets.
-    Inference runs inline on the event loop: for TinyML-scale graphs the
-    call is the work, and keeping it on-loop makes scheduling deterministic
-    under the fake clock.
+    ``executor`` picks the dispatch stage: the default
+    :class:`~repro.serve.executor.InlineExecutor` runs flushes on the
+    event loop (deterministic under the fake clock), while an off-loop
+    backend overlaps inference with coalescing — ``infer`` must then be
+    thread-safe (``CompiledModel`` is: its AOT caches fill under a lock).
+    The batcher never closes an executor it was handed (shared backends
+    outlive individual models); the owner — usually the
+    ``ServingRegistry`` — does.
+
+    ``classes`` maps class names to :class:`ClassPolicy`; a ``"default"``
+    class (priority 0, the batcher-level ``max_delay_s``) is always
+    present unless explicitly overridden.
     """
 
     def __init__(self, infer: Callable, *, name: str = "model",
                  max_batch: int = 32, max_delay_s: float = 0.002,
                  max_queue: int = 256, clock: Optional[Clock] = None,
-                 metrics: Optional[ModelMetrics] = None):
+                 metrics: Optional[ModelMetrics] = None,
+                 classes: Optional[dict] = None,
+                 executor: Optional[InferenceExecutor] = None):
         assert max_batch >= 1 and max_queue >= 1
         self._infer = infer
         self.name = name
@@ -139,9 +224,16 @@ class MicroBatcher:
         self.max_delay_s = max_delay_s
         self.max_queue = max_queue
         self.clock = clock or Clock()
+        self.executor = executor if executor is not None else InlineExecutor()
         self.metrics = metrics if metrics is not None else \
             ModelMetrics(now=self.clock.now())
-        self._pending = []
+        self.classes = dict(classes or {})
+        self.classes.setdefault(DEFAULT_CLASS, ClassPolicy())
+        self._heap = []          # EDF priority queue of _Request
+        self._live = 0           # heap entries not marked dead
+        self._in_flight_rows = 0  # dispatched to executor, not yet retired
+        self._seq = 0
+        self._flights: set = set()  # off-loop flush tasks in progress
         self._arrival = asyncio.Event()
         self._task: Optional[asyncio.Task] = None
         self._closed = False
@@ -165,25 +257,87 @@ class MicroBatcher:
 
     # -- client side ------------------------------------------------------
     def __len__(self) -> int:
-        return len(self._pending)
+        return self._live
 
-    def submit(self, x) -> asyncio.Future:
-        """Enqueue one request; returns a future resolving to its output
-        row. Raises :class:`QueueFullError` when the bounded queue is at
-        capacity (load shedding) and ``RuntimeError`` when closed."""
+    @property
+    def in_flight_rows(self) -> int:
+        """Rows dispatched to the executor and not yet retired — the other
+        half of the ``pending + in_flight <= max_queue`` bound."""
+        return self._in_flight_rows
+
+    def _policy(self, cls: str) -> ClassPolicy:
+        try:
+            return self.classes[cls]
+        except KeyError:
+            raise KeyError(f"{self.name}: unknown priority class {cls!r}; "
+                           f"configured: {sorted(self.classes)}") from None
+
+    def _shed(self, cls: str, priority: int) -> None:
+        """Make room for a priority-``priority`` newcomer or refuse it.
+
+        Victim = the live pending request with the lowest priority, latest
+        deadline (least urgent of the least important). Only a *strictly*
+        lower-priority victim is evicted — same-priority traffic keeps the
+        original shed-at-tail semantics (newcomer refused). In-flight rows
+        are never preempted: once a batch is on device its memory is
+        committed."""
+        victim = None
+        for r in self._heap:
+            if r.dead:
+                continue
+            if victim is None or (r.priority, -r.deadline, -r.seq) < \
+                    (victim.priority, -victim.deadline, -victim.seq):
+                victim = r
+        if victim is None or victim.priority >= priority:
+            self.metrics.observe_reject(cls)
+            raise QueueFullError(self.name, self._live)
+        victim.dead = True
+        self._live -= 1
+        if not victim.future.done():
+            victim.future.set_exception(
+                PreemptedError(self.name, victim.cls, self._live))
+        self.metrics.observe_preempt(victim.cls)
+        # lazy deletion stays bounded: compact once dead entries outnumber
+        # the queue cap, so the heap never holds more than 2*max_queue
+        # entries no matter how preemption-heavy the overload is
+        if len(self._heap) - self._live > self.max_queue:
+            self._heap = [r for r in self._heap if not r.dead]
+            heapq.heapify(self._heap)
+
+    def submit(self, x, cls: str = DEFAULT_CLASS,
+               deadline_s: Optional[float] = None) -> asyncio.Future:
+        """Enqueue one request under priority class ``cls``; returns a
+        future resolving to its output row. ``deadline_s`` overrides the
+        class's coalescing delay for this request (seconds from now).
+
+        At capacity (``pending + in_flight_rows >= max_queue``) admission
+        sheds by priority: a strictly lower-priority pending request is
+        evicted (its future gets :class:`PreemptedError`) in the
+        newcomer's favor, otherwise the newcomer is refused with
+        :class:`QueueFullError`. Raises ``RuntimeError`` when closed and
+        ``KeyError`` for an unknown class."""
         if self._closed:
             raise RuntimeError(f"{self.name}: batcher is closed")
-        if len(self._pending) >= self.max_queue:
-            self.metrics.observe_reject()
-            raise QueueFullError(self.name, len(self._pending))
+        policy = self._policy(cls)
+        if self._live + self._in_flight_rows >= self.max_queue:
+            self._shed(cls, policy.priority)  # raises unless a slot opened
+        now = self.clock.now()
+        delay = deadline_s if deadline_s is not None else \
+            (policy.max_delay_s if policy.max_delay_s is not None
+             else self.max_delay_s)
         fut = asyncio.get_running_loop().create_future()
-        self._pending.append(_Request(x, fut, self.clock.now()))
-        self.metrics.observe_submit()
+        req = _Request(x, fut, now, cls, policy.priority, now + delay,
+                       self._seq)
+        self._seq += 1
+        heapq.heappush(self._heap, req)
+        self._live += 1
+        self.metrics.observe_submit(cls)
         self._arrival.set()
         return fut
 
-    async def infer(self, x):
-        return await self.submit(x)
+    async def infer(self, x, cls: str = DEFAULT_CLASS,
+                    deadline_s: Optional[float] = None):
+        return await self.submit(x, cls=cls, deadline_s=deadline_s)
 
     # -- scheduler side ---------------------------------------------------
     def start(self) -> "MicroBatcher":
@@ -195,7 +349,10 @@ class MicroBatcher:
 
     async def close(self, drain: bool = True) -> None:
         """Stop the scheduler. With ``drain`` remaining requests are
-        flushed synchronously; otherwise their futures are cancelled."""
+        flushed (through the executor) and in-flight flushes awaited;
+        otherwise pending futures are cancelled (counted ``cancelled``,
+        not ``failed``) — in-flight flushes still complete either way.
+        The executor itself is NOT closed: the batcher may share it."""
         self._closed = True
         if self._task is not None:
             self._task.cancel()
@@ -203,14 +360,19 @@ class MicroBatcher:
                 await self._task
             self._task = None
         if drain:
-            while self._pending:
+            while self._live:
                 self._flush()
         else:
-            for r in self._pending:
+            for r in self._heap:
+                if r.dead:
+                    continue
                 if not r.future.done():
                     r.future.cancel()
-                self.metrics.observe_fail()
-            self._pending.clear()
+                self.metrics.observe_cancelled(r.cls)
+            self._heap.clear()
+            self._live = 0
+        if self._flights:
+            await asyncio.gather(*list(self._flights))
 
     async def __aenter__(self):
         return self.start()
@@ -218,22 +380,29 @@ class MicroBatcher:
     async def __aexit__(self, *exc):
         await self.close()
 
+    def _earliest_deadline(self) -> Optional[float]:
+        """Peek the EDF heap, discarding dead (preempted) entries."""
+        while self._heap and self._heap[0].dead:
+            heapq.heappop(self._heap)
+        return self._heap[0].deadline if self._heap else None
+
     async def _run(self) -> None:
         while True:
-            if not self._pending:
+            if not self._live:
                 self._arrival.clear()
                 await self._arrival.wait()
-            # Oldest request anchors the flush deadline; the inner wait
-            # re-checks after every arrival so a bucket-full queue flushes
-            # immediately, without consuming any of its deadline.
-            deadline = self._pending[0].t + self.max_delay_s
-            while 0 < len(self._pending) < self.max_batch:
-                remaining = deadline - self.clock.now()
+            # The earliest pending deadline anchors the flush timer and is
+            # re-read after every arrival: a bucket-full queue flushes
+            # immediately, and a late-arriving shorter-deadline class pulls
+            # the flush forward past older laxer deadlines.
+            while 0 < self._live < self.max_batch:
+                remaining = self._earliest_deadline() - self.clock.now()
                 if remaining <= 0:
                     break
                 self._arrival.clear()
                 await self._arrival_or_sleep(remaining)
-            self._flush()
+            if self._live:
+                self._flush()
 
     async def _arrival_or_sleep(self, dt: float) -> None:
         """Wake on a new arrival or after ``dt`` (clock-driven), whichever
@@ -249,36 +418,97 @@ class MicroBatcher:
                 with contextlib.suppress(asyncio.CancelledError):
                     await t
 
+    def _take(self) -> list:
+        """Drain up to ``max_batch`` live requests in EDF order."""
+        reqs = []
+        while self._heap and len(reqs) < self.max_batch:
+            r = heapq.heappop(self._heap)
+            if not r.dead:
+                reqs.append(r)
+        self._live -= len(reqs)
+        return reqs
+
     def _flush(self) -> None:
-        take = min(len(self._pending), self.max_batch)
-        if take == 0:
+        reqs = self._take()
+        if not reqs:
             return
-        reqs = self._pending[:take]
-        del self._pending[:take]
-        t0 = self.clock.now()
         try:
             # staging included: a malformed request (wrong sample shape)
             # must poison its batch, not kill the scheduler task
             xs = np.stack([np.asarray(r.x) for r in reqs])
-            ys = np.asarray(self._infer(xs))
-            if ys.shape[:1] != (take,):
-                raise ValueError(f"{self.name}: infer returned shape "
-                                 f"{ys.shape} for a {take}-row batch")
-        except Exception as e:  # poison batch fails its requests, not the
-            for r in reqs:      # scheduler — the loop keeps serving
-                if not r.future.done():
-                    r.future.set_exception(e)
-                self.metrics.observe_fail()
+        except Exception as e:
+            self._fail(reqs, e)
             return
-        t1 = self.clock.now()
+        if self.executor.inline:
+            # deterministic fast path: the flush completes synchronously on
+            # the event loop (no task hop), exactly the FakeClock contract
+            t0 = self.clock.now()
+            self.metrics.observe_dispatch(len(reqs))
+            try:
+                ys = self._validate_rows(self._infer(xs), len(reqs))
+            except Exception as e:  # poison batch fails its requests, not
+                self._fail(reqs, e)  # the scheduler — the loop keeps serving
+                return
+            finally:
+                self.metrics.observe_retire(len(reqs))
+            self._distribute(reqs, ys, t0, self.clock.now())
+        else:
+            # pipelined path: hand the batch to the executor and return to
+            # coalescing; the flight task distributes when the device call
+            # lands. In-flight rows stay inside the max_queue bound.
+            self._in_flight_rows += len(reqs)
+            self.metrics.observe_dispatch(len(reqs))
+            task = asyncio.get_running_loop().create_task(
+                self._flush_offloop(reqs, xs))
+            self._flights.add(task)
+            task.add_done_callback(self._flights.discard)
+
+    def _validate_rows(self, ys, take: int):
+        """One validation for both dispatch paths: inline and off-loop
+        must poison batches under identical conditions."""
+        ys = np.asarray(ys)
+        if ys.shape[:1] != (take,):
+            raise ValueError(f"{self.name}: infer returned shape "
+                             f"{ys.shape} for a {take}-row batch")
+        return ys
+
+    async def _flush_offloop(self, reqs: list, xs) -> None:
+        t0 = self.clock.now()
+        try:
+            ys = self._validate_rows(
+                await self.executor.run(self._infer, xs), len(reqs))
+        except Exception as e:
+            self._fail(reqs, e)
+            return
+        finally:
+            self._in_flight_rows -= len(reqs)
+            self.metrics.observe_retire(len(reqs))
+        self._distribute(reqs, ys, t0, self.clock.now())
+
+    def _fail(self, reqs: list, err: Exception) -> None:
+        """Poison batch: the error reaches every request's caller; rows the
+        caller already abandoned count cancelled, not failed."""
+        for r in reqs:
+            if not r.future.done():
+                r.future.set_exception(err)
+                self.metrics.observe_fail(r.cls)
+            else:
+                self.metrics.observe_cancelled(r.cls)
+
+    def _distribute(self, reqs: list, ys, t0: float, t1: float) -> None:
         # bucket rows as actually dispatched: predict_q_many chunks on
         # bucket boundaries, so occupancy reflects real padding, not the
         # bucket_for(take) a single un-chunked call would have paid
+        by_class: dict = {}
+        for r in reqs:
+            by_class[r.cls] = by_class.get(r.cls, 0) + 1
         self.metrics.observe_batch(
-            take, dispatched_bucket_rows(take, self.max_batch), t1 - t0)
+            len(reqs), dispatched_bucket_rows(len(reqs), self.max_batch),
+            t1 - t0, by_class=by_class)
         for r, y in zip(reqs, ys):
-            if not r.future.done():  # caller may have cancelled/timed out
+            if not r.future.done():
                 r.future.set_result(y)
-                self.metrics.observe_done(t1 - r.t)
-            else:
-                self.metrics.observe_fail()
+                self.metrics.observe_done(t1 - r.t, cls=r.cls,
+                                          slo_s=self._policy(r.cls).slo_s)
+            else:  # caller cancelled/timed out: distinct from infer failure
+                self.metrics.observe_cancelled(r.cls)

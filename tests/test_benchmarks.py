@@ -28,6 +28,7 @@ def test_check_bench_gates_names_and_ratios(tmp_path):
     # all names present, speedup >= 1.0, non-speedup ratios ignored
     ok = {**speedup,
           "serve/a_vs_b": {"ratio": 1.0, "median_us": None},
+          "serve/x_offloop_vs_inline": {"ratio": 1.1, "median_us": None},
           "runtime/paging_slowdown_ratio": {"ratio": 0.4, "median_us": None}}
     assert _run_check_bench(tmp_path, speedup, ok) == 0
     # a speedup regressing below parity fails even though the name exists
@@ -36,6 +37,37 @@ def test_check_bench_gates_names_and_ratios(tmp_path):
     # a baseline name disappearing still fails
     assert _run_check_bench(tmp_path, speedup, {"runtime/other_us":
                                                 {"median_us": 1.0}}) == 1
+
+
+def test_check_bench_gates_offloop_presence_and_slo(tmp_path):
+    base = {"runtime/x_us": {"median_us": 1.0}}
+    offloop = {"serve/sine_offloop_vs_inline": {"ratio": 1.2,
+                                                "median_us": None}}
+    # serve/ records without the executor A/B record fail...
+    assert _run_check_bench(tmp_path, base, {
+        **base, "serve/sine_serial_us": {"median_us": 5.0}}) == 1
+    # ...with it (ratio >= 1.0) the run passes; runtime-only runs are exempt
+    assert _run_check_bench(tmp_path, base, {
+        **base, "serve/sine_serial_us": {"median_us": 5.0}, **offloop}) == 0
+    assert _run_check_bench(tmp_path, base, base) == 0
+    # a *_slo record must carry per-class attainment: absent, empty, or
+    # non-numeric attainment fails; a complete dict passes
+    for bad_att in (None, {}, {"interactive": None}):
+        doc = {**base, **offloop,
+               "serve/sine_mixed_slo": {"median_us": 3.0,
+                                        "slo_attainment": bad_att}}
+        assert _run_check_bench(tmp_path, base, doc) == 1
+    doc = {**base, **offloop,
+           "serve/sine_mixed_slo": {
+               "median_us": 3.0,
+               "slo_attainment": {"interactive": 0.97, "batch": 0.74}}}
+    assert _run_check_bench(tmp_path, base, doc) == 0
+    # per-class name regression: a fresh record silently dropping a class
+    # the baseline reported fails, even though the dict is still non-empty
+    narrowed = {**doc, "serve/sine_mixed_slo": {
+        "median_us": 3.0, "slo_attainment": {"interactive": 0.97}}}
+    assert _run_check_bench(tmp_path, doc, narrowed) == 1
+    assert _run_check_bench(tmp_path, doc, doc) == 0
 
 
 @pytest.mark.slow
@@ -92,8 +124,17 @@ def test_bench_serve_fast_smoke(tmp_path, monkeypatch, capsys):
         "serve/sine_dynamic_per_req_us", "serve/sine_dynamic_vs_serial",
         "serve/sine_poisson_x1_p95_us", "serve/sine_poisson_x2_p95_us",
         "serve/sine_poisson_x4_p95_us",
+        "serve/sine_offloop_p95_us", "serve/sine_offloop_vs_inline",
+        "serve/sine_mixed_slo",
+        "serve/speech_poisson_p95_us", "serve/person_poisson_p95_us",
         "serve/sine_batched_planned_us", "serve/sine_batched_percall_us",
         "serve/sine_batched_pads_percall_vs_planned"}
+    # the executor A/B and SLO records satisfy the new check_bench gates:
+    # the mixed-priority record reports attainment for BOTH classes
+    att = doc["serve/sine_mixed_slo"]["slo_attainment"]
+    assert set(att) == {"interactive", "batch"}
+    assert all(isinstance(v, float) for v in att.values())
+    assert doc["serve/sine_offloop_vs_inline"]["ratio"] > 0
     # the layout A/B records name their route, and the structural pad-op
     # ratio is deterministic (per-call route pays 7 pads per FC vs the
     # planned route's <=1): exactly what tools/check_bench.py gates on

@@ -15,7 +15,8 @@ from repro.core.quantize import quantize_graph
 from repro.configs.paper_models import build_sine
 from repro.serve.metrics import ModelMetrics
 from repro.serve.registry import ServingRegistry
-from repro.serve.scheduler import FakeClock, MicroBatcher, QueueFullError
+from repro.serve.scheduler import (ClassPolicy, FakeClock, MicroBatcher,
+                                   PreemptedError, QueueFullError)
 
 
 def run(coro):
@@ -306,6 +307,179 @@ def test_close_without_drain_cancels_pending():
         assert record == []
         with pytest.raises(RuntimeError):
             b.submit(np.float32([2]))
+    run(body())
+
+
+# ---------------------------------------------------- priority classes / EDF --
+
+TWO_CLASSES = {
+    "interactive": ClassPolicy(priority=1, max_delay_s=0.002, slo_s=0.004),
+    "batch": ClassPolicy(priority=0, max_delay_s=0.050),
+}
+
+
+def test_edf_flush_order_and_earliest_deadline_trigger():
+    """EDF: a flush drains the most urgent request first regardless of
+    arrival order, and fires at the EARLIEST pending deadline — a
+    batch-class request submitted first does not anchor the timer."""
+    async def body():
+        clock = FakeClock()
+        rows = []
+
+        def infer(xs):
+            rows.append([float(v[0]) for v in xs])
+            return xs * 2
+
+        b = MicroBatcher(infer, name="edf", clock=clock, max_batch=4,
+                         max_delay_s=0.010, max_queue=8,
+                         classes=TWO_CLASSES)
+        async with b:
+            slow = b.submit(np.float32([1]), cls="batch")       # ddl 50ms
+            fast = b.submit(np.float32([2]), cls="interactive")  # ddl 2ms
+            await clock.advance(0.002)  # interactive deadline, not batch's
+            # one flush at t=2ms carrying BOTH rows, interactive first
+            assert rows == [[2.0, 1.0]]
+            assert clock.now() == pytest.approx(0.002)
+            assert np.array_equal(fast.result(), np.float32([4]))
+            assert np.array_equal(slow.result(), np.float32([2]))
+    run(body())
+
+
+def test_late_interactive_arrival_pulls_flush_forward():
+    """A shorter-deadline class arriving mid-wait re-anchors the flush
+    timer (the old oldest-request anchor would have waited 50 ms)."""
+    async def body():
+        clock = FakeClock()
+        record = []
+        b = make_batcher(record, clock, max_batch=8, classes=TWO_CLASSES)
+        async with b:
+            b.submit(np.float32([0]), cls="batch")   # deadline t=50ms
+            await clock.advance(0.010)
+            assert record == []
+            b.submit(np.float32([1]), cls="interactive")  # deadline t=12ms
+            await clock.advance(0.002)
+            assert record == [2]  # both flushed at the interactive deadline
+            assert clock.now() == pytest.approx(0.012)
+    run(body())
+
+
+def test_per_request_deadline_override():
+    async def body():
+        clock = FakeClock()
+        record = []
+        b = make_batcher(record, clock, max_batch=8, classes=TWO_CLASSES)
+        async with b:
+            b.submit(np.float32([0]), cls="batch", deadline_s=0.003)
+            await clock.advance(0.003)  # override, not the class's 50ms
+            assert record == [1]
+        with pytest.raises(KeyError, match="unknown priority class"):
+            b2 = make_batcher([], clock, classes=TWO_CLASSES)
+            b2.submit(np.float32([0]), cls="no-such-class")
+    run(body())
+
+
+def test_shed_by_priority_evicts_lowest_then_refuses_equal():
+    """At capacity a higher-priority newcomer evicts the least urgent
+    lowest-priority pending request (PreemptedError on the victim, counted
+    ``preempted``); an equal-priority newcomer is refused (QueueFullError,
+    counted ``rejected``) — the original shed-at-tail behavior."""
+    async def body():
+        clock = FakeClock()
+        record = []
+        b = make_batcher(record, clock, max_batch=8, max_queue=2,
+                         classes=TWO_CLASSES)
+        async with b:
+            b1 = b.submit(np.float32([1]), cls="batch")
+            b2 = b.submit(np.float32([2]), cls="batch")  # least urgent
+            hi = b.submit(np.float32([3]), cls="interactive")
+            await clock.drain()
+            # b2 (same priority as b1 but less urgent: later seq at equal
+            # deadline) was evicted in hi's favor
+            assert b2.done()
+            with pytest.raises(PreemptedError):
+                b2.result()
+            # PreemptedError is shed load: QueueFullError handlers catch it
+            assert isinstance(b2.exception(), QueueFullError)
+            assert len(b) == 2 and b.metrics.preempted == 1
+            # equal-or-lower priority newcomer is refused, no eviction
+            with pytest.raises(QueueFullError):
+                b.submit(np.float32([4]), cls="batch")
+            assert b.metrics.rejected == 1
+            # another interactive evicts the remaining batch request...
+            hi2 = b.submit(np.float32([5]), cls="interactive")
+            assert b1.done() and isinstance(b1.exception(), PreemptedError)
+            assert b.metrics.preempted == 2
+            # ...but once every pending request is interactive, a further
+            # interactive newcomer has no lower-priority victim: refused
+            with pytest.raises(QueueFullError):
+                b.submit(np.float32([6]), cls="interactive")
+            assert b.metrics.rejected == 2
+            await clock.advance(0.002)  # interactive deadline flushes both
+            assert record == [2]
+            assert hi.done() and not hi.exception()
+            assert hi2.done() and not hi2.exception()
+            snap = b.metrics.snapshot(clock.now())
+            assert snap["preempted"] == 2 and snap["inflight"] == 0
+            assert snap["classes"]["batch"]["preempted"] == 2
+            assert snap["classes"]["batch"]["rejected"] == 1
+            assert snap["classes"]["interactive"]["rejected"] == 1
+            assert snap["classes"]["interactive"]["completed"] == 2
+    run(body())
+
+
+def test_per_class_metrics_latency_and_slo_attainment():
+    async def body():
+        clock = FakeClock()
+        record = []
+        b = make_batcher(record, clock, max_batch=8, classes=TWO_CLASSES)
+        async with b:
+            b.submit(np.float32([0]), cls="interactive")
+            b.submit(np.float32([1]), cls="batch")
+            await clock.advance(0.002)  # flush at the interactive deadline
+            assert record == [2]
+            snap = b.metrics.snapshot(clock.now())
+            cls = snap["classes"]
+            # both rows waited 2ms; interactive's 4ms SLO is attained,
+            # batch has no SLO target -> attainment is None
+            assert cls["interactive"]["p95_ms"] == pytest.approx(2.0)
+            assert cls["interactive"]["slo_attainment"] == 1.0
+            assert cls["batch"]["slo_attainment"] is None
+            assert cls["interactive"]["row_share"] == pytest.approx(0.5)
+            assert b.metrics.slo_attainment() == {"interactive": 1.0}
+    run(body())
+
+
+def test_caller_cancelled_rows_count_cancelled_not_failed():
+    """Rows whose caller abandoned the future before the flush landed are
+    ``cancelled``, not ``failed`` — client disconnects must not look like
+    inference errors (the old metrics folded both into ``failed``)."""
+    async def body():
+        clock = FakeClock()
+        record = []
+        async with make_batcher(record, clock, max_batch=4) as b:
+            futs = [b.submit(np.float32([i])) for i in range(3)]
+            futs[1].cancel()  # caller gives up before the deadline flush
+            await clock.advance(0.010)
+            assert record == [3]
+            snap = b.metrics.snapshot(clock.now())
+            assert snap["completed"] == 2
+            assert snap["cancelled"] == 1 and snap["failed"] == 0
+            assert snap["inflight"] == 0  # balance includes cancelled
+    run(body())
+
+
+def test_close_without_drain_counts_cancelled_not_failed():
+    async def body():
+        clock = FakeClock()
+        record = []
+        b = make_batcher(record, clock, max_delay_s=10.0).start()
+        b.submit(np.float32([1]))
+        b.submit(np.float32([2]))
+        await b.close(drain=False)
+        assert record == []
+        snap = b.metrics.snapshot(clock.now())
+        assert snap["cancelled"] == 2 and snap["failed"] == 0
+        assert snap["inflight"] == 0
     run(body())
 
 

@@ -3,9 +3,11 @@
 #   1. tier-1 test suite (ROADMAP.md contract)
 #   2. fast benchmark run -> fresh BENCH json
 #   3. bench regression check against the committed baseline:
-#      record names must all still be produced AND every speedup ratio
-#      (*_speedup / *_vs_* records) must stay >= 1.0 — a layout or
-#      batching regression fails the Actions gate here
+#      record names must all still be produced, every speedup ratio
+#      (*_speedup / *_vs_* records, incl. serve/*_offloop_vs_inline) must
+#      stay >= 1.0, and every serve *_slo record must carry per-class
+#      SLO attainment — a layout, batching, executor-pipelining, or
+#      priority-scheduling regression fails the Actions gate here
 #
 #   tools/check.sh [--skip-tests]
 set -euo pipefail

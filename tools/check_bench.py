@@ -1,4 +1,4 @@
-"""Bench regression gate, two checks per run:
+"""Bench regression gate, four checks per run:
 
 1. **Name regression** — every record name in the committed
    BENCH_runtime.json baseline must still be produced by a fresh run.
@@ -10,20 +10,43 @@
 2. **Ratio regression** — every *speedup* record in the fresh run (name
    containing ``_speedup`` or ``_vs_``) must keep ``ratio >= 1.0``. These
    records are the headline claims of the trajectory (compiled vs
-   interpreter, dynamic batching vs serial, planned vs per-call layout);
-   a ratio dipping below parity means the optimization regressed into a
-   pessimization, which must fail the gate even though the record name
-   still exists. Dimensionless records that are *expected* below 1.0
-   (paging slowdowns) use other naming and are not gated.
+   interpreter, dynamic batching vs serial, planned vs per-call layout,
+   off-loop vs inline executors); a ratio dipping below parity means the
+   optimization regressed into a pessimization, which must fail the gate
+   even though the record name still exists. Dimensionless records that
+   are *expected* below 1.0 (paging slowdowns) use other naming and are
+   not gated.
+
+3. **Executor A/B presence** — a fresh run that produced any ``serve/``
+   records must include an ``*_offloop_vs_inline`` record: the pipelined
+   executor comparison silently disappearing from the serving bench is a
+   name regression even before it lands in a baseline.
+
+4. **SLO attainment presence** — every ``*_slo`` record must carry a
+   non-empty ``slo_attainment`` dict with a numeric attained fraction per
+   priority class, and a fresh record may not drop a class the committed
+   baseline's record reported (name-regression, applied per class). A
+   mixed-priority serving record that lost a class's attainment field
+   means the scheduler stopped reporting (or the bench stopped
+   exercising) that class — the gate fails rather than letting the SLO
+   trajectory silently narrow.
 
   python tools/check_bench.py BASELINE.json FRESH.json
 """
 from __future__ import annotations
 
 import json
+import numbers
 import sys
 
 SPEEDUP_MARKERS = ("_speedup", "_vs_")
+OFFLOOP_MARKER = "_offloop_vs_inline"
+
+
+def _is_slo_record(name: str) -> bool:
+    # "_slo" as a whole name component ("..._slo" / "..._slo_p95"), not a
+    # substring hit on e.g. "paging_slowdown_ratio"
+    return name.endswith("_slo") or "_slo_" in name
 
 
 def ratio_violations(doc: dict) -> list:
@@ -38,9 +61,51 @@ def ratio_violations(doc: dict) -> list:
     return bad
 
 
+def slo_violations(doc: dict) -> list:
+    """Names of ``*_slo`` records whose per-class attainment is absent or
+    malformed (not a non-empty dict of numbers)."""
+    bad = []
+    for name, rec in sorted(doc.items()):
+        if not _is_slo_record(name):
+            continue
+        att = rec.get("slo_attainment") if isinstance(rec, dict) else None
+        if not isinstance(att, dict) or not att or \
+                not all(isinstance(v, numbers.Real) for v in att.values()):
+            bad.append(name)
+    return bad
+
+
+def slo_narrowed(baseline: dict, fresh: dict) -> list:
+    """(name, missing_classes) for *_slo records whose fresh attainment
+    dict dropped a class the baseline record reported."""
+    bad = []
+    for name in sorted(set(baseline) & set(fresh)):
+        if not _is_slo_record(name):
+            continue
+        base_att = baseline[name].get("slo_attainment") \
+            if isinstance(baseline[name], dict) else None
+        fresh_att = fresh[name].get("slo_attainment") \
+            if isinstance(fresh[name], dict) else None
+        if isinstance(base_att, dict):
+            missing = sorted(set(base_att)
+                             - set(fresh_att if isinstance(fresh_att, dict)
+                                   else ()))
+            if missing:
+                bad.append((name, missing))
+    return bad
+
+
+def missing_offloop(doc: dict) -> bool:
+    """True when serve/ records exist but the executor A/B record is gone."""
+    names = set(doc)
+    return any(n.startswith("serve/") for n in names) and \
+        not any(OFFLOOP_MARKER in n for n in names)
+
+
 def main(baseline_path: str, fresh_path: str) -> int:
     with open(baseline_path) as f:
-        baseline = set(json.load(f))
+        baseline_doc = json.load(f)
+    baseline = set(baseline_doc)
     with open(fresh_path) as f:
         fresh_doc = json.load(f)
     fresh = set(fresh_doc)
@@ -63,12 +128,34 @@ def main(baseline_path: str, fresh_path: str) -> int:
         for name, ratio in bad_ratios:
             print(f"  - {name} = {ratio:.3f}x", file=sys.stderr)
         rc = 1
+    if missing_offloop(fresh_doc):
+        print("check_bench: FAIL — serve/ records present but no "
+              f"*{OFFLOOP_MARKER} record: the executor A/B went missing",
+              file=sys.stderr)
+        rc = 1
+    bad_slo = slo_violations(fresh_doc)
+    if bad_slo:
+        print(f"check_bench: FAIL — {len(bad_slo)} *_slo record(s) missing "
+              f"per-class slo_attainment:", file=sys.stderr)
+        for name in bad_slo:
+            print(f"  - {name}", file=sys.stderr)
+        rc = 1
+    narrowed = slo_narrowed(baseline_doc, fresh_doc)
+    if narrowed:
+        print(f"check_bench: FAIL — {len(narrowed)} *_slo record(s) dropped "
+              f"baseline priority class(es):", file=sys.stderr)
+        for name, classes in narrowed:
+            print(f"  - {name}: missing {', '.join(classes)}",
+                  file=sys.stderr)
+        rc = 1
     if rc == 0:
         n_gated = sum(1 for n in fresh
                       if any(m in n for m in SPEEDUP_MARKERS))
+        n_slo = sum(1 for n in fresh if _is_slo_record(n))
         print(f"check_bench: OK — all {len(baseline)} baseline names "
               f"present ({len(fresh)} total), {n_gated} speedup ratio(s) "
-              f">= 1.0")
+              f">= 1.0, {n_slo} SLO record(s) carrying per-class "
+              f"attainment")
     return rc
 
 
