@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.analysis import arena_liveness, measure_live_bytes
 from repro.core import CompiledModel
 from repro.core.memory import memory_report, plan_paged
 
@@ -44,6 +45,16 @@ def main(fast: bool = False):
         lines.append(csv_line(
             f"memory/{name}_xla_temp_kB", 0.0,
             f"{mem.temp_size_in_bytes/1024:.2f}"))
+        # Static arena bound from the plan auditor vs the measured walk of
+        # the real lowerings — ratio lands in BENCH_runtime.json and
+        # tools/check_bench.py fails the gate if it drifts past 10%
+        # (the static shape model no longer matches what lowers).
+        bound = arena_liveness(cm.exec_plan)
+        measured = measure_live_bytes(cm.exec_plan)
+        lines.append(csv_line(
+            f"memory/{name}_arena_peak_kB", None,
+            f"{bound.peak_bytes/1024:.2f}",
+            ratio=(bound.peak_bytes / measured) if measured else None))
     return lines
 
 

@@ -53,7 +53,7 @@ def main() -> None:
         print(f"# bench {name} done in {time.time()-t0:.1f}s",
               file=sys.stderr)
 
-    json_prefixes = tuple(p for p in ("runtime/", "serve/")
+    json_prefixes = tuple(p for p in ("runtime/", "serve/", "memory/")
                           if p.rstrip("/") in ran)
     if json_prefixes:
         # Merge into an existing file: a partial run (--only runtime/serve)

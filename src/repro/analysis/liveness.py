@@ -1,0 +1,193 @@
+"""Arena liveness — pass 2 of the plan auditor.
+
+The paper's static-memory claim, made checkable for our plans: from the
+``ExecutionPlan`` alone, compute each activation tensor's live range over
+the (sequential) op order and the *physical* bytes it occupies on a given
+route — per-call, any batched bucket (planned layouts keep activations
+lane-padded, so physical != logical), or paged — and report the peak sum
+of simultaneously-live bytes. That peak is the static arena bound serving
+can rely on before any executable exists.
+
+The bound is cross-validated two ways: :func:`measure_live_bytes` walks
+the SAME registry lowerings the engine traces (abstractly via
+``jax.eval_shape`` by default, or concretely executing real arrays) and
+records what each op actually produces, so any drift between the static
+shape model and the real lowering shows up as a mismatch; and
+:func:`xla_advisory` attaches the XLA executable's own memory analysis
+when one is available.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import registry as R
+from repro.core.engine import ExecutionPlan
+from repro.core.memory import liveness, plan_paged
+
+
+@dataclasses.dataclass
+class ArenaBound:
+    """Static liveness result for one route."""
+
+    route: str
+    peak_bytes: int
+    peak_step: int               # op index at the peak (-1 = graph entry)
+    per_step_bytes: List[int]    # live bytes after each step
+    sizes: Dict[int, int]        # tensor id -> physical bytes on this route
+
+
+def _phys_shape(plan: ExecutionPlan, tid: int, producer_layout: Any,
+                batched: bool, bucket: int) -> Tuple[int, ...]:
+    """Physical shape tensor ``tid`` occupies in the engine's value
+    environment on the selected route (mirrors ``ExecutionPlan.lower``:
+    planned producers store padded values, everyone else logical)."""
+    t = plan.graph.tensor(tid)
+    if producer_layout is None:
+        base = tuple(t.shape)
+        if batched and tid in plan.graph.inputs:
+            base = plan.entry_shape(tid)  # staged-pad entry contract
+        return ((bucket,) + base) if batched else base
+    lay = producer_layout
+    if lay.kind == "fc":
+        if batched:
+            # qmatmul_planned_batched keeps rows logical: (B, m, N')
+            m = tuple(t.shape)[0]
+            return (bucket, m, lay.out_shape[-1])
+        return tuple(lay.out_shape)
+    # conv/dwconv: batch merges into the native NHWC batch and splits back
+    return ((bucket,) + tuple(lay.out_shape)) if batched \
+        else tuple(lay.out_shape)
+
+
+def arena_liveness(plan: ExecutionPlan, batched: bool = False,
+                   bucket: int = 1) -> ArenaBound:
+    """Peak live activation bytes on one route, from the plan alone."""
+    g = plan.graph
+    lt = liveness(g)
+    layouts = plan.layout.layouts if plan.layout is not None else {}
+    producer_layout = {op.outputs[0]: layouts.get(i)
+                       for i, op in enumerate(g.ops)}
+    sizes: Dict[int, int] = {}
+    for tid in lt:
+        shape = _phys_shape(plan, tid, producer_layout.get(tid),
+                            batched, bucket)
+        sizes[tid] = int(np.prod(shape, dtype=np.int64)) * \
+            np.dtype(g.tensor(tid).dtype).itemsize
+
+    n_ops = len(g.ops)
+    per_step: List[int] = []
+    peak, peak_step = 0, -1
+    for step in range(-1, n_ops):
+        live = sum(sz for tid, sz in sizes.items()
+                   if lt[tid].first <= step <= lt[tid].last)
+        per_step.append(live)
+        if live > peak:
+            peak, peak_step = live, step
+    route = f"batched[b={bucket}]" if batched else "per-call"
+    return ArenaBound(route=route, peak_bytes=int(peak),
+                      peak_step=peak_step, per_step_bytes=per_step,
+                      sizes=sizes)
+
+
+def paged_peak_bytes(plan: ExecutionPlan) -> Optional[int]:
+    """Working-set peak for the paged route (Sec. 4.3 accounting), when
+    the plan pages any layer."""
+    if not plan.paged:
+        return None
+    return int(plan_paged(plan.graph, plan.paged).peak_bytes)
+
+
+def _nbytes(v: Any) -> int:
+    shape = tuple(getattr(v, "shape", ()))
+    dtype = np.dtype(getattr(v, "dtype", np.float32))
+    return int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+
+
+def measure_live_bytes(plan: ExecutionPlan, batched: bool = False,
+                       bucket: int = 1, concrete: bool = False) -> int:
+    """Peak live bytes measured against the real lowerings.
+
+    Re-walks the graph exactly as ``ExecutionPlan.lower`` does — same
+    registry routes, same keep-padded value environment, same liveness —
+    but records each op's ACTUAL output shape instead of predicting it.
+    With ``concrete=True`` real arrays are executed eagerly and their
+    ``nbytes`` summed (the runtime ground truth, used by the tests on the
+    small models); the default walks abstractly with ``jax.eval_shape``,
+    which reports identical sizes without paying execution time.
+    """
+    g = plan.graph
+    lt = liveness(g)
+    layouts = plan.layout.layouts if plan.layout is not None else {}
+    lead = (slice(None),) if batched else ()
+    run: Callable = R.run_batched if batched else R.run_compiled
+
+    env: Dict[int, Any] = {}
+    for tid in g.inputs:
+        t = g.tensor(tid)
+        shape = ((bucket,) + plan.entry_shape(tid)) if batched \
+            else tuple(t.shape)
+        dt = np.dtype(t.dtype)
+        env[tid] = np.zeros(shape, dt) if concrete \
+            else jax.ShapeDtypeStruct(shape, dt)
+
+    def val(tid: int, keep_padded: bool = False) -> Any:
+        t = g.tensor(tid)
+        if t.is_const:
+            return np.asarray(t.data)
+        v = env[tid]
+        if not keep_padded and tuple(v.shape[len(lead):]) != tuple(t.shape):
+            if concrete:
+                v = np.asarray(v)[lead + tuple(slice(0, d)
+                                               for d in t.shape)]
+            else:
+                v = jax.ShapeDtypeStruct(
+                    tuple(v.shape[:len(lead)]) + tuple(t.shape), v.dtype)
+        return v
+
+    def live_bytes(step: int) -> int:
+        return sum(_nbytes(v) for tid, v in env.items()
+                   if lt[tid].first <= step <= lt[tid].last)
+
+    peak = live_bytes(-1)
+    for i, op in enumerate(g.ops):
+        lay = layouts.get(i)
+        ctx = R.OpContext(g, op, i, folded=plan.folded.get(i),
+                          use_pallas=plan.use_pallas,
+                          n_pages=plan.paged.get(i), layout=lay)
+        vals = [val(t, keep_padded=lay is not None) for t in op.inputs]
+        if concrete:
+            out = run(ctx, vals)
+        else:
+            out = jax.eval_shape(lambda *vs: run(ctx, list(vs)), *vals)
+        env[op.outputs[0]] = np.asarray(out) if concrete else out
+        peak = max(peak, live_bytes(i))
+        # liveness-based eviction: what the engine's buffer reuse drops
+        for tid in [t for t, v in env.items() if lt[t].last <= i]:
+            del env[tid]
+    return int(peak)
+
+
+def xla_advisory(compiled_model: Any) -> Dict[str, Any]:
+    """Best-effort cross-check against XLA's own analysis of the per-call
+    executable (advisory: backends differ in what they report)."""
+    out: Dict[str, Any] = {}
+    try:
+        ma = compiled_model.memory_analysis()
+        for key in ("temp_size_in_bytes", "argument_size_in_bytes",
+                    "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, key, None)
+            if v is not None:
+                out[key] = int(v)
+    except Exception:  # pragma: no cover - backend-dependent surface
+        pass
+    try:
+        ca = compiled_model.cost_analysis()
+        if isinstance(ca, dict) and "bytes accessed" in ca:
+            out["bytes_accessed"] = float(ca["bytes accessed"])
+    except Exception:  # pragma: no cover
+        pass
+    return out

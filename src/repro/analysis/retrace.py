@@ -1,0 +1,209 @@
+"""No-retrace auditor — pass 3 of the plan auditor.
+
+Proves, statically, that the serving hot path cannot compile anything
+after warm-up. The engine has exactly three fill sites (all counted by
+``CompiledModel.compile_events``): the per-call AOT slot, the bucket
+executable cache, and the staged entry-pad cache. ``predict_q_many``'s
+chunking fully determines which cache keys a flush of any size can touch,
+and ``warmup_batched``'s loops fully determine which keys warm-up fills —
+both derivations live here, independently re-derived from the public
+chunking/bucketing contracts rather than read out of the engine, so a
+drift in either shows up as a failed proof. The audit then checks
+reachable ⊆ warmed, and (when handed a live, warmed ``CompiledModel``)
+checks both sets against the actual cache contents via ``bucket_sizes`` /
+``staged_pad_keys``.
+
+A companion lint catches the other way a "warm" path can still retrace:
+weakly-typed Python scalars baked into compile-time constants change the
+jaxpr when their value crosses a type-promotion boundary. All folded and
+layout constants must be concrete arrays with explicit dtypes, and op
+attrs must be hashable (they end up in trace cache keys).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import ExecutionPlan, bucket_floor, bucket_for
+
+from .report import ERROR, Finding
+
+StageKey = Tuple[Tuple[int, ...], Tuple[Tuple[int, int], ...]]
+
+
+def _entry_widths(plan: ExecutionPlan, tid: int,
+                  batch: int) -> Tuple[Tuple[int, int], ...]:
+    """The fused bucket-fill + entry-lane-pad widths for one staged input
+    (mirrors ``CompiledModel._entry_widths``)."""
+    t = plan.graph.tensor(tid)
+    phys = plan.entry_shape(tid)
+    return ((0, bucket_for(batch) - batch),) + tuple(
+        (0, p - d) for p, d in zip(phys, t.shape))
+
+
+def _stage_keys(plan: ExecutionPlan,
+                batches: Iterable[int]) -> List[StageKey]:
+    """Staged-pad cache keys touched when chunks of the given batch sizes
+    are staged: key = (padded-source shape, pad widths); zero-width stages
+    skip the pad cache entirely (``_predict_q_batched`` guards on
+    ``any(w)``)."""
+    keys: List[StageKey] = []
+    for tid in plan.graph.inputs:
+        t = plan.graph.tensor(tid)
+        for b in batches:
+            widths = _entry_widths(plan, tid, b)
+            if any(w for _, w in widths):
+                keys.append(((b,) + tuple(t.shape), widths))
+    return sorted(set(keys))
+
+
+def reachable_buckets(max_batch: int) -> Tuple[int, ...]:
+    """Every bucket ``predict_q_many(..., max_batch=max_batch)`` can
+    dispatch, for ANY request batch size: chunks are at most
+    ``step = bucket_floor(max_batch)`` rows, so chunk batches range over
+    1..step and their buckets are exactly the powers of two <= step."""
+    step = bucket_floor(max_batch)
+    return tuple(1 << i for i in range(step.bit_length()))
+
+
+def reachable_chunk_batches(max_batch: int) -> Tuple[int, ...]:
+    """Every chunk batch size the splitter can hand to the staged-pad
+    path: full chunks are exactly ``step`` rows, the tail is 1..step-1,
+    and batch 0 short-circuits before staging."""
+    return tuple(range(1, bucket_floor(max_batch) + 1))
+
+
+def reachable_stage_keys(plan: ExecutionPlan,
+                         max_batch: int) -> List[StageKey]:
+    return _stage_keys(plan, reachable_chunk_batches(max_batch))
+
+
+def warmed_buckets(warm_batch: int) -> Tuple[int, ...]:
+    """Buckets ``warmup_batched(warm_batch)`` compiles: powers of two up
+    to ``bucket_for(warm_batch)`` inclusive."""
+    top = bucket_for(warm_batch)
+    return tuple(1 << i for i in range(top.bit_length()))
+
+
+def warmed_stage_keys(plan: ExecutionPlan,
+                      warm_batch: int) -> List[StageKey]:
+    """Staged-pad keys ``warmup_batched(warm_batch)`` fills: every batch
+    size 1..bucket_for(warm_batch), nonzero widths only."""
+    return _stage_keys(plan, range(1, bucket_for(warm_batch) + 1))
+
+
+def audit_retrace(plan: ExecutionPlan, max_batch: int,
+                  warm_batch: Optional[int] = None,
+                  compiled_model: Any = None
+                  ) -> Tuple[Dict[str, Any], List[Finding]]:
+    """The no-retrace proof for one plan.
+
+    ``max_batch`` is the serving cap (``predict_q_many(max_batch=...)``);
+    ``warm_batch`` is what ``warmup_batched`` was (or will be) called with
+    — defaults to ``bucket_floor(max_batch)``, which is what
+    ``MicroBatcher.for_model`` warms. When ``compiled_model`` is given it
+    must already be warmed; its actual cache contents are then checked
+    against both derivations, closing the loop between the static proof
+    and the live object.
+    """
+    if warm_batch is None:
+        warm_batch = bucket_floor(max_batch)
+    need_b = reachable_buckets(max_batch)
+    have_b = warmed_buckets(warm_batch)
+    need_s = reachable_stage_keys(plan, max_batch)
+    have_s = warmed_stage_keys(plan, warm_batch)
+
+    findings: List[Finding] = []
+    for b in need_b:
+        if b not in have_b:
+            findings.append(Finding(
+                ERROR, "R001", f"bucket {b}",
+                f"reachable via max_batch={max_batch} but not compiled by "
+                f"warmup_batched({warm_batch}) — first such flush would "
+                f"jit on the hot path"))
+    missing_s = sorted(set(need_s) - set(have_s))
+    for shape, widths in missing_s:
+        findings.append(Finding(
+            ERROR, "R002", f"stage pad {shape}",
+            f"staged entry pad (widths {widths}) reachable but not warmed "
+            f"by warmup_batched({warm_batch})"))
+
+    cache_b = cache_s = None
+    if compiled_model is not None:
+        cache_b = tuple(compiled_model.bucket_sizes())
+        cache_s = tuple(compiled_model.staged_pad_keys())
+        for b in need_b:
+            if b not in cache_b:
+                findings.append(Finding(
+                    ERROR, "R003", f"bucket {b}",
+                    f"reachable but absent from the live executable cache "
+                    f"{cache_b} — model not (fully) warmed"))
+        for key in sorted(set(need_s) - set(cache_s)):
+            findings.append(Finding(
+                ERROR, "R004", f"stage pad {key[0]}",
+                "reachable staged pad absent from the live cache — model "
+                "not (fully) warmed"))
+
+    findings += lint_weak_types(plan)
+
+    info: Dict[str, Any] = {
+        "max_batch": max_batch,
+        "warm_batch": warm_batch,
+        "reachable_buckets": list(need_b),
+        "warmed_buckets": list(have_b),
+        "reachable_stage_keys": len(need_s),
+        "warmed_stage_keys": len(have_s),
+        "ok": not any(f.severity == ERROR for f in findings),
+    }
+    if cache_b is not None:
+        info["live_buckets"] = list(cache_b)
+        info["live_stage_keys"] = len(cache_s or ())
+    return info, findings
+
+
+def _is_strong_array(v: Any) -> bool:
+    """Concrete array with an explicit (non-weak) dtype: safe to bake into
+    a trace. Python scalars and weakly-typed jax scalars are not — their
+    promotion behavior depends on surrounding dtypes, so the SAME plan can
+    produce a DIFFERENT jaxpr after an innocuous value change."""
+    if isinstance(v, (bool, int, float, complex)):
+        return False
+    if not hasattr(v, "dtype"):
+        return False
+    return not bool(getattr(v, "weak_type", False))
+
+
+def lint_weak_types(plan: ExecutionPlan) -> List[Finding]:
+    """Scalar-constant lint over everything the plan bakes into traces:
+    folded Eq. (4)/(7)/(10) constants, layout constants, and op attrs
+    (which must additionally be hashable — they key trace caches)."""
+    out: List[Finding] = []
+    for i, fc in plan.folded.items():
+        for field, v in vars(fc).items():
+            if not _is_strong_array(v):
+                out.append(Finding(
+                    ERROR, "R010", f"op {i} folded.{field}",
+                    f"weakly-typed constant {type(v).__name__} — bake as a "
+                    f"dtype-explicit array or it can retrace"))
+    if plan.layout is not None:
+        for i, lay in plan.layout.layouts.items():
+            for j, c in enumerate(lay.consts):
+                if not isinstance(c, np.ndarray):
+                    out.append(Finding(
+                        ERROR, "R011", f"op {i} layout.consts[{j}]",
+                        f"layout constant is {type(c).__name__}, expected a "
+                        f"host ndarray padded at plan time"))
+            if not isinstance(lay.w_phys, np.ndarray):
+                out.append(Finding(
+                    ERROR, "R011", f"op {i} layout.w_phys",
+                    f"planned weights are {type(lay.w_phys).__name__}, "
+                    f"expected a host ndarray"))
+    for i, op in enumerate(plan.graph.ops):
+        try:
+            hash(tuple(sorted(op.attrs.items())))
+        except TypeError:
+            out.append(Finding(
+                ERROR, "R012", f"op {i} ({op.op})",
+                "unhashable op attrs — cannot key a trace cache"))
+    return out

@@ -170,22 +170,34 @@ def bucket_for(batch: int) -> int:
     """Power-of-two shape bucket: one AOT executable serves all batch sizes
     up to the bucket (inputs are zero-padded, outputs sliced).
 
-    Public so the serving layer (``repro.serve.scheduler``) can coalesce
-    request queues into exactly the buckets the engine AOT-compiles."""
-    return 1 << max(0, int(batch - 1).bit_length())
+    Total on ``batch >= 0``: ``bucket_for(0) == bucket_for(1) == 1`` (an
+    empty batch maps to the smallest executable — it used to map to bucket
+    2 via a ``bit_length`` underflow), negative batches raise. Public so
+    the serving layer (``repro.serve.scheduler``) can coalesce request
+    queues into exactly the buckets the engine AOT-compiles."""
+    if batch < 0:
+        raise ValueError(f"batch must be >= 0, got {batch}")
+    return 1 << int(max(1, batch) - 1).bit_length()
 
 
 def bucket_floor(batch: int) -> int:
     """Largest power-of-two bucket <= ``batch`` (>= 1): the chunk size that
-    fills a bucket exactly instead of padding past it."""
+    fills a bucket exactly instead of padding past it. Total on
+    ``batch >= 0``: batches 0 and 1 both floor to the 1-bucket (there is
+    no smaller executable), negative batches raise."""
+    if batch < 0:
+        raise ValueError(f"batch must be >= 0, got {batch}")
     return 1 << (max(1, int(batch)).bit_length() - 1)
 
 
 def dispatched_bucket_rows(batch: int, max_batch: Optional[int] = None) -> int:
     """Total bucket rows ``predict_q_many(batch, max_batch=...)`` actually
     dispatches: full ``bucket_floor(max_batch)`` chunks are exact, only the
-    tail pads — to its own bucket. Public so serving metrics (batch
-    occupancy) account for what the engine really paid."""
+    tail pads — to its own bucket; an empty batch dispatches nothing.
+    Public so serving metrics (batch occupancy) account for what the
+    engine really paid."""
+    if batch == 0:
+        return 0
     if max_batch is None:
         return bucket_for(batch)
     step = bucket_floor(max_batch)
@@ -224,6 +236,11 @@ class CompiledModel:
         self._batched_aot = {}  # bucket size -> AOT executable
         self._stage_pad = {}    # (shape, widths) -> jitted device-side pad
         self._compile_lock = threading.Lock()  # guards all cache fills
+        # Monotone count of cache fills (per-call AOT, bucket executables,
+        # staged pads). Incremented only inside the lock-guarded miss
+        # paths, so "no compilation happened on the hot path" is directly
+        # observable: the no-retrace auditor's runtime counterpart.
+        self.compile_events = 0
 
     # Everything compile-time lives in the ExecutionPlan; these read-only
     # views keep the established attribute API without a second copy that
@@ -260,6 +277,7 @@ class CompiledModel:
                 if self._aot is None:  # double-checked: compile-once under
                     lowered = self._fn.lower(*self._input_specs())  # racing
                     self._aot = lowered.compile()                   # callers
+                    self.compile_events += 1
         return self._aot
 
     def compile_batched(self, batch: int):
@@ -285,6 +303,7 @@ class CompiledModel:
                     exe = fn.lower(
                         *self.exec_plan.batched_input_specs(bucket)).compile()
                     self._batched_aot[bucket] = exe
+                    self.compile_events += 1
         return exe
 
     def bucket_sizes(self) -> tuple:
@@ -293,6 +312,14 @@ class CompiledModel:
         compile on the hot path."""
         with self._compile_lock:  # stable view while another thread fills
             return tuple(sorted(self._batched_aot))
+
+    def staged_pad_keys(self) -> tuple:
+        """(shape, widths) keys with a compiled-and-cached staged entry
+        pad, sorted. Together with :meth:`bucket_sizes` this is the warmed
+        working set the no-retrace auditor (``repro.analysis.retrace``)
+        checks statically-reachable cache keys against."""
+        with self._compile_lock:
+            return tuple(sorted(self._stage_pad))
 
     def warmup_batched(self, max_batch: int):
         """Ahead-of-serving warm-up: AOT-compile every power-of-two bucket
@@ -352,6 +379,7 @@ class CompiledModel:
                 if fn is None:
                     fn = jax.jit(lambda a: jnp.pad(a, widths))
                     self._stage_pad[key] = fn
+                    self.compile_events += 1
         return fn
 
     def _entry_widths(self, tid, batch: int) -> tuple:
@@ -414,6 +442,14 @@ class CompiledModel:
         if max_batch is not None and max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         batch = arrs[0].shape[0]
+        if batch == 0:
+            # An empty flush dispatches nothing (and in particular never
+            # touches an unwarmed batch-0 stage-pad key): return empty
+            # rows of the output shapes/dtypes directly.
+            outs = tuple(np.empty((0,) + tuple(self.graph.tensor(t).shape),
+                                  np.dtype(self.graph.tensor(t).dtype))
+                         for t in self.graph.outputs)
+            return outs if len(outs) > 1 else outs[0]
         # Split whenever the batch exceeds the largest exactly-fillable
         # bucket — NOT only when it exceeds max_batch: a serving flush of
         # max_batch=6 rows must drain as 4+2 exact buckets, never pad its

@@ -28,6 +28,13 @@ Each operator registers exactly one :class:`OpDescriptor` holding:
     Quantization metadata for weighted ops: the per-channel axis used by
     PTQ (``quantize``) and the ΣW reduction spec used by compile-time
     folding (``preprocess``) — previously two more hand-kept tables.
+``infer``
+    Declarative shape/dtype inference: ``infer(op, in_specs)`` returns the
+    ``(shape, dtype)`` of the op's single output from its input specs and
+    attributes alone, raising :class:`InferError` on malformed operands.
+    This is what the static plan auditor (``repro.analysis``) propagates
+    through a graph to verify every declared tensor without executing
+    anything — the registry stays the single source of per-op truth.
 
 Executors: :func:`run_reference`, :func:`run_compiled`, :func:`run_batched`,
 plus :func:`run_graph_reference` (the env-walk used by calibration).
@@ -43,6 +50,12 @@ import numpy as np
 from . import graph as G
 from . import ops_ref as K
 from .paging import paged_fc_folded
+
+
+class InferError(ValueError):
+    """An op's operands cannot type-check: wrong rank, mismatched
+    contraction dims, malformed attributes. Raised by the descriptors'
+    ``infer`` specs and reported (not propagated) by the plan auditor."""
 
 
 # ---------------------------------------------------------------------------
@@ -130,6 +143,7 @@ class OpDescriptor:
     weight_axis: Optional[int] = None   # per-channel PTQ axis of inputs[1]
     w_sum_axes: Optional[tuple] = None  # ΣW reduction axes (Eq. 4/7/10)
     w_count_axes: Optional[tuple] = None  # axes whose sizes multiply to n·z_X·z_W's n
+    infer: Optional[Callable] = None    # (op, in_specs) -> (shape, dtype)
 
 
 _REGISTRY: dict = {}
@@ -256,6 +270,128 @@ def _softmax_batched(ctx: OpContext, x):
 
 
 # ---------------------------------------------------------------------------
+# Declarative shape/dtype inference (the ``infer`` specs)
+#
+# Each spec sees only the *declared* input specs (shape/dtype/qparams — never
+# data) and the op's attributes, and returns the output (shape, dtype) the
+# graph MUST declare. ``repro.analysis.verify`` propagates these through a
+# plan; the engines never call them, so a graph that type-checks here is
+# guaranteed to have been checked against exactly the contracts the kernels
+# assume.
+# ---------------------------------------------------------------------------
+
+def _require(cond, msg):
+    if not cond:
+        raise InferError(msg)
+
+
+def _same_hw(h, w, kh, kw, stride, padding):
+    _require(padding in ("SAME", "VALID"), f"bad padding {padding!r}")
+    sh, sw = stride
+    _require(sh >= 1 and sw >= 1, f"bad stride {stride!r}")
+    if padding == "VALID":
+        _require(h >= kh and w >= kw,
+                 f"VALID window ({kh},{kw}) exceeds input ({h},{w})")
+    return G.conv_out_hw(h, w, kh, kw, stride, padding)
+
+
+def _bias_check(ins, n):
+    if len(ins) > 2:
+        b = ins[2]
+        _require(tuple(b.shape) == (n,),
+                 f"bias shape {b.shape} != ({n},)")
+        _require(b.dtype in ("int32", "float32"),
+                 f"bias dtype {b.dtype} must be int32 (quantized) or float32")
+
+
+def _fc_infer(op, ins):
+    x, w = ins[0], ins[1]
+    _require(len(w.shape) == 2, f"FC weight must be rank 2, got {w.shape}")
+    _require(len(x.shape) >= 2, f"FC input must be rank >= 2, got {x.shape}")
+    _require(x.shape[-1] == w.shape[0],
+             f"FC contraction mismatch: input {x.shape} x weight {w.shape}")
+    _bias_check(ins, w.shape[1])
+    return tuple(x.shape[:-1]) + (w.shape[1],), x.dtype
+
+
+def _conv_infer(op, ins):
+    x, f = ins[0], ins[1]
+    _require(len(x.shape) == 4, f"conv input must be NHWC, got {x.shape}")
+    _require(len(f.shape) == 4, f"conv filter must be rank 4, got {f.shape}")
+    kh, kw, cin, cout = f.shape
+    _require(x.shape[3] == cin,
+             f"conv channel mismatch: input {x.shape} x filter {f.shape}")
+    oh, ow = _same_hw(x.shape[1], x.shape[2], kh, kw,
+                      op.attrs["stride"], op.attrs["padding"])
+    _bias_check(ins, cout)
+    return (x.shape[0], oh, ow, cout), x.dtype
+
+
+def _dwconv_infer(op, ins):
+    x, w = ins[0], ins[1]
+    _require(len(x.shape) == 4, f"dwconv input must be NHWC, got {x.shape}")
+    _require(len(w.shape) == 4 and w.shape[3] == 1,
+             f"dwconv weight must be (kh, kw, c, 1), got {w.shape}")
+    kh, kw, c, _ = w.shape
+    _require(x.shape[3] == c,
+             f"dwconv channel mismatch: input {x.shape} x weight {w.shape}")
+    oh, ow = _same_hw(x.shape[1], x.shape[2], kh, kw,
+                      op.attrs["stride"], op.attrs["padding"])
+    _bias_check(ins, c)
+    return (x.shape[0], oh, ow, c), x.dtype
+
+
+def _pool_infer(op, ins):
+    x = ins[0]
+    _require(len(x.shape) == 4, f"pool input must be NHWC, got {x.shape}")
+    wh, ww = op.attrs["window"]
+    oh, ow = _same_hw(x.shape[1], x.shape[2], wh, ww,
+                      op.attrs["stride"], op.attrs["padding"])
+    return (x.shape[0], oh, ow, x.shape[3]), x.dtype
+
+
+def _add_infer(op, ins):
+    a, b = ins[0], ins[1]
+    _require(tuple(a.shape) == tuple(b.shape),
+             f"ADD operand shapes differ: {a.shape} vs {b.shape}")
+    _require(a.dtype == b.dtype,
+             f"ADD operand dtypes differ: {a.dtype} vs {b.dtype}")
+    return tuple(a.shape), a.dtype
+
+
+def _pad_infer(op, ins):
+    x = ins[0]
+    pads = op.attrs["pads"]
+    _require(len(pads) == len(x.shape),
+             f"pads {pads} do not cover rank-{len(x.shape)} input")
+    _require(all(lo >= 0 and hi >= 0 for lo, hi in pads),
+             f"negative pad widths: {pads}")
+    return tuple(d + lo + hi
+                 for d, (lo, hi) in zip(x.shape, pads)), x.dtype
+
+
+def _reshape_infer(op, ins):
+    x = ins[0]
+    new = tuple(op.attrs["new_shape"])
+    _require(int(np.prod(x.shape, dtype=np.int64))
+             == int(np.prod(new, dtype=np.int64)),
+             f"reshape {x.shape} -> {new} changes element count")
+    return new, x.dtype
+
+
+def _eltwise_infer(op, ins):
+    return tuple(ins[0].shape), ins[0].dtype
+
+
+def _softmax_infer(op, ins):
+    x = ins[0]
+    axis = op.attrs.get("axis", -1)
+    _require(-len(x.shape) <= axis < len(x.shape),
+             f"softmax axis {axis} out of range for {x.shape}")
+    return tuple(x.shape), x.dtype
+
+
+# ---------------------------------------------------------------------------
 # FULLY_CONNECTED — Eqs. (2)-(4)
 # ---------------------------------------------------------------------------
 
@@ -291,6 +427,7 @@ register(
     lower_pallas=_fc_pallas,
     lower_paged=_fc_paged,
     batched=_fc_batched,
+    infer=_fc_infer,
     weight_axis=1,
     w_sum_axes=(0,),
     w_count_axes=(0,),
@@ -336,6 +473,7 @@ register(
     lower_compiled=_conv_compiled,
     lower_pallas=_conv_pallas,
     batched=_merge_lead2,
+    infer=_conv_infer,
     weight_axis=3,
     w_sum_axes=(0, 1, 2),
     w_count_axes=(0, 1, 2),
@@ -372,6 +510,7 @@ register(
     lower_compiled=_dwconv_compiled,
     lower_pallas=_dwconv_pallas,
     batched=_merge_lead2,
+    infer=_dwconv_infer,
     weight_axis=2,
     w_sum_axes=(0, 1, 3),
     w_count_axes=(0, 1),
@@ -394,10 +533,10 @@ def _make_pool(qf, ff):
 
 register(G.AVERAGE_POOL_2D,
          eval_reference=_make_pool(K.average_pool2d_q, K.average_pool2d_f),
-         batched=_merge_lead2)
+         batched=_merge_lead2, infer=_pool_infer)
 register(G.MAX_POOL_2D,
          eval_reference=_make_pool(K.max_pool2d_q, K.max_pool2d_f),
-         batched=_merge_lead2)
+         batched=_merge_lead2, infer=_pool_infer)
 
 
 # ---------------------------------------------------------------------------
@@ -414,7 +553,8 @@ def _add_eval(ctx, a, b):
                    s_y=s_y, z_y=z_y, fused=ctx.fused)
 
 
-register(G.ADD, eval_reference=_add_eval)  # elementwise: default batch rule
+register(G.ADD, eval_reference=_add_eval,  # elementwise: default batch rule
+         infer=_add_infer)
 
 
 def _pad_eval(ctx, x):
@@ -425,14 +565,16 @@ def _pad_eval(ctx, x):
     return K.pad_f(x, pads=pads)
 
 
-register(G.PAD, eval_reference=_pad_eval, batched=_pad_batched)
+register(G.PAD, eval_reference=_pad_eval, batched=_pad_batched,
+         infer=_pad_infer)
 
 
 def _reshape_eval(ctx, x):
     return jnp.reshape(x, ctx.op.attrs["new_shape"])
 
 
-register(G.RESHAPE, eval_reference=_reshape_eval, batched=_reshape_batched)
+register(G.RESHAPE, eval_reference=_reshape_eval, batched=_reshape_batched,
+         infer=_reshape_infer)
 
 
 # ---------------------------------------------------------------------------
@@ -447,8 +589,10 @@ def _make_act(qf, ff):
     return impl
 
 
-register(G.RELU, eval_reference=_make_act(K.relu_q, K.relu_f))
-register(G.RELU6, eval_reference=_make_act(K.relu6_q, K.relu6_f))
+register(G.RELU, eval_reference=_make_act(K.relu_q, K.relu_f),
+         infer=_eltwise_infer)
+register(G.RELU6, eval_reference=_make_act(K.relu6_q, K.relu6_f),
+         infer=_eltwise_infer)
 
 
 def _softmax_eval(ctx, x):
@@ -458,7 +602,8 @@ def _softmax_eval(ctx, x):
     return K.softmax_f(x, axis=axis)
 
 
-register(G.SOFTMAX, eval_reference=_softmax_eval, batched=_softmax_batched)
+register(G.SOFTMAX, eval_reference=_softmax_eval, batched=_softmax_batched,
+         infer=_softmax_infer)
 
 
 assert set(registered_ops()) == set(G.ALL_OPS), (

@@ -45,6 +45,14 @@ class InferenceExecutor:
 
     inline = True
 
+    @property
+    def closed(self) -> bool:
+        """Whether :meth:`close` has run. Backends without resources
+        (``InlineExecutor``) never close — their ``close`` is a no-op and
+        this stays ``False``, so audits can tell "nothing to release"
+        apart from "released"."""
+        return False
+
     async def run(self, infer: Callable, xs):
         raise NotImplementedError
 
@@ -95,6 +103,10 @@ class ThreadPoolExecutorBackend(InferenceExecutor):
     @property
     def max_workers(self) -> int:
         return self._max_workers
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     async def run(self, infer: Callable, xs):
         if self._closed:

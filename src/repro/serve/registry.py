@@ -104,6 +104,12 @@ class ServingRegistry:
         self._started = True
         return self
 
+    @property
+    def stopped(self) -> bool:
+        """Whether :meth:`stop` has run (stop is terminal and
+        idempotent)."""
+        return self._stopped
+
     async def stop(self, drain: bool = True) -> None:
         """Terminal: drains (or cancels) every batcher, closes every
         executor handed to the registry (the registry-level one AND any
@@ -111,7 +117,14 @@ class ServingRegistry:
         executor to the registry transfers ownership), and shuts the
         registry down for good — serving again means building a new
         registry (warm-ups are per-``CompiledModel``, so the models
-        themselves can be re-registered cheaply)."""
+        themselves can be re-registered cheaply).
+
+        Idempotent: a second stop (e.g. ``__aexit__`` after an explicit
+        ``stop()``) returns immediately — batchers are not re-closed and
+        no metric is counted twice."""
+        if self._stopped:
+            return
+        self._stopped = True
         for e in self._entries.values():
             await e.batcher.close(drain=drain)
         owned = {id(self.executor): self.executor} \
@@ -121,7 +134,6 @@ class ServingRegistry:
         for ex in owned.values():         # is idempotent and a no-op for
             ex.close()                    # InlineExecutor
         self._started = False
-        self._stopped = True
 
     async def __aenter__(self):
         return self.start()

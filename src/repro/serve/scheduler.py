@@ -265,6 +265,12 @@ class MicroBatcher:
         half of the ``pending + in_flight <= max_queue`` bound."""
         return self._in_flight_rows
 
+    @property
+    def closed(self) -> bool:
+        """Whether :meth:`close` has run (close is terminal and
+        idempotent); a closed batcher refuses ``submit``/``start``."""
+        return self._closed
+
     def _policy(self, cls: str) -> ClassPolicy:
         try:
             return self.classes[cls]
@@ -352,13 +358,18 @@ class MicroBatcher:
         flushed (through the executor) and in-flight flushes awaited;
         otherwise pending futures are cancelled (counted ``cancelled``,
         not ``failed``) — in-flight flushes still complete either way.
-        The executor itself is NOT closed: the batcher may share it."""
+        The executor itself is NOT closed: the batcher may share it.
+
+        Idempotent, including with rows still in flight: a second close
+        (even one racing the first) only awaits the remaining flights —
+        it cannot re-cancel a request or double-count any metric, so
+        every admitted request still ends in exactly one terminal state."""
         self._closed = True
-        if self._task is not None:
-            self._task.cancel()
+        task, self._task = self._task, None  # claimed by ONE closer
+        if task is not None:
+            task.cancel()
             with contextlib.suppress(asyncio.CancelledError):
-                await self._task
-            self._task = None
+                await task
         if drain:
             while self._live:
                 self._flush()

@@ -1,0 +1,253 @@
+"""Tests for the compile-time plan auditor (``repro.analysis``).
+
+The auditor's claims are all static, so the tests pair every static
+verdict with a runtime ground truth: the verifier must accept every paper
+model and reject seeded mutations; the static arena peak must equal a
+measured walk of the real lowerings (and, on the small models, eager
+execution of real arrays); the no-retrace proof must agree with the
+engine's ``compile_events`` counter under a post-warmup request storm; and
+the derived pad budget must equal the pad primitives actually traced.
+"""
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import (arena_liveness, audit_pads, audit_retrace,
+                            errors, lint_weak_types, measure_live_bytes,
+                            measured_pads, pad_budget, paged_peak_bytes,
+                            reachable_buckets, to_json, to_markdown,
+                            verify_plan, warmed_buckets)
+from repro.analysis.__main__ import (audit_plan, quantized_graph, selftest)
+from repro.core import CompiledModel, ExecutionPlan
+from repro.core import graph as G
+
+MODELS = ("sine", "speech", "person")
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {name: quantized_graph(name) for name in MODELS}
+
+
+@pytest.fixture(scope="module")
+def sine_cm(graphs):
+    return CompiledModel(copy.deepcopy(graphs["sine"]))
+
+
+# ------------------------------------------------------------- verifier --
+
+@pytest.mark.parametrize("name", MODELS)
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_verifier_accepts_paper_models(graphs, name, use_pallas):
+    plan = ExecutionPlan.build(graphs[name], use_pallas=use_pallas)
+    findings = verify_plan(plan)
+    assert not errors(findings), [str(f) for f in errors(findings)]
+
+
+def _mutate(g, mutation):
+    """Apply one seeded defect; returns the verifier code it must raise."""
+    fc_ops = [i for i, op in enumerate(g.ops)
+              if op.op == G.FULLY_CONNECTED]
+    i = fc_ops[0]
+    op = g.ops[i]
+    if mutation == "swapped_scales":
+        w = g.tensor(op.inputs[1])
+        b = g.tensor(op.inputs[2])
+        b.qparams = G.QParams(np.asarray(w.qparams.scale),
+                              np.zeros(np.asarray(w.qparams.scale).shape,
+                                       np.int32), axis=b.qparams.axis)
+        return "V024"
+    if mutation == "dropped_zero_point":
+        w = g.tensor(op.inputs[1])
+        w.qparams = G.QParams(np.asarray(w.qparams.scale), np.int32(0),
+                              axis=w.qparams.axis)
+        return "V020"
+    assert mutation == "dangling_ref"
+    op.inputs = [len(g.tensors) + 7] + list(op.inputs[1:])
+    return "V001"
+
+
+@settings(max_examples=12)
+@given(name=st.sampled_from(MODELS),
+       mutation=st.sampled_from(["swapped_scales", "dropped_zero_point",
+                                 "dangling_ref"]))
+def test_verifier_rejects_seeded_mutations(graphs, name, mutation):
+    g = copy.deepcopy(graphs[name])
+    code = _mutate(g, mutation)
+    findings = verify_plan(ExecutionPlan(g, {}, None, {}, False))
+    assert any(f.code == code for f in errors(findings)), (
+        mutation, [str(f) for f in findings])
+
+
+def test_verifier_route_checks(graphs):
+    g = graphs["sine"]
+    plan = ExecutionPlan.build(g, use_pallas=False)
+    # paged pages must divide the FC's output width
+    fc0 = next(i for i, op in enumerate(g.ops)
+               if op.op == G.FULLY_CONNECTED)
+    n_out = g.tensor(g.ops[fc0].inputs[1]).shape[1]
+    bad = ExecutionPlan(g, plan.folded, None, {fc0: n_out + 1}, False)
+    assert any(f.code == "V032" for f in errors(verify_plan(bad)))
+    # layout handed to a plan that never routes through pallas: warning
+    planned = ExecutionPlan.build(g, use_pallas=True)
+    off = ExecutionPlan(g, planned.folded, planned.layout, {}, False)
+    assert any(f.code == "V035" for f in verify_plan(off))
+
+
+# ------------------------------------------------------ arena liveness --
+
+@pytest.mark.parametrize("name", MODELS)
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_arena_static_equals_measured(graphs, name, use_pallas):
+    plan = ExecutionPlan.build(graphs[name], use_pallas=use_pallas)
+    for batched, bucket in ((False, 1), (True, 1), (True, 4)):
+        bound = arena_liveness(plan, batched=batched, bucket=bucket)
+        measured = measure_live_bytes(plan, batched=batched, bucket=bucket)
+        assert measured > 0
+        # acceptance bound is 10%; the model is in fact exact
+        assert abs(bound.peak_bytes - measured) <= 0.10 * measured, (
+            name, use_pallas, batched, bucket, bound.peak_bytes, measured)
+
+
+@pytest.mark.parametrize("name", ["sine", "speech"])
+def test_arena_measured_concrete_matches_abstract(graphs, name):
+    """Eager execution of real arrays reports the same live-byte peak the
+    abstract eval_shape walk predicts (the runtime ground truth)."""
+    for use_pallas in (False, True):
+        plan = ExecutionPlan.build(graphs[name], use_pallas=use_pallas)
+        abstract = measure_live_bytes(plan)
+        concrete = measure_live_bytes(plan, concrete=True)
+        assert abstract == concrete
+
+
+def test_arena_batched_scales_with_bucket(graphs):
+    plan = ExecutionPlan.build(graphs["sine"], use_pallas=False)
+    b1 = arena_liveness(plan, batched=True, bucket=1).peak_bytes
+    b4 = arena_liveness(plan, batched=True, bucket=4).peak_bytes
+    assert b4 == 4 * b1  # no planned layouts: everything is per-row
+
+
+def test_paged_advisory(graphs):
+    g = graphs["sine"]
+    fc0 = next(i for i, op in enumerate(g.ops)
+               if op.op == G.FULLY_CONNECTED)
+    plan = ExecutionPlan.build(g, use_pallas=False, paged={fc0: 2})
+    assert not errors(verify_plan(plan))
+    assert paged_peak_bytes(plan) > 0
+    assert paged_peak_bytes(ExecutionPlan.build(g)) is None
+
+
+# ----------------------------------------------------------- no-retrace --
+
+def test_reachable_and_warmed_bucket_math():
+    assert reachable_buckets(1) == (1,)
+    assert reachable_buckets(4) == (1, 2, 4)
+    assert reachable_buckets(6) == (1, 2, 4)   # chunks clamp to floor 4
+    assert reachable_buckets(8) == (1, 2, 4, 8)
+    assert warmed_buckets(2) == (1, 2)
+    assert warmed_buckets(5) == (1, 2, 4, 8)   # warmup rounds UP
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_retrace_proof_default_warmup(graphs, use_pallas):
+    """MicroBatcher.for_model warms bucket_floor(max_batch): the default
+    proof must go through for every max_batch, pow2 or not."""
+    plan = ExecutionPlan.build(graphs["sine"], use_pallas=use_pallas)
+    for max_batch in (1, 2, 3, 4, 6, 8):
+        info, findings = audit_retrace(plan, max_batch)
+        assert info["ok"] and not errors(findings), (
+            max_batch, [str(f) for f in findings])
+
+
+def test_retrace_detects_underwarmed(graphs):
+    plan = ExecutionPlan.build(graphs["sine"])
+    info, findings = audit_retrace(plan, max_batch=8, warm_batch=2)
+    assert not info["ok"]
+    assert any(f.code == "R001" for f in errors(findings))
+
+
+def test_retrace_live_cache_cross_check(graphs, sine_cm):
+    plan = sine_cm.exec_plan
+    sine_cm.warmup_batched(4)
+    info, findings = audit_retrace(plan, 4, compiled_model=sine_cm)
+    assert info["ok"], [str(f) for f in findings]
+    assert set(info["reachable_buckets"]) <= set(info["live_buckets"])
+    # the same model serving max_batch=16 is provably under-warmed
+    info, findings = audit_retrace(plan, 16, warm_batch=4,
+                                   compiled_model=sine_cm)
+    assert any(f.code == "R001" for f in findings)
+    assert any(f.code == "R003" for f in findings)
+
+
+def test_no_retrace_runtime_counter(graphs, sine_cm):
+    """The runtime half of the proof: after warmup_batched, a storm of
+    every batch size (0 included) must not move compile_events."""
+    sine_cm.warmup_batched(4)
+    t = sine_cm.graph.tensor(sine_cm.graph.inputs[0])
+    events = sine_cm.compile_events
+    assert events > 0
+    for batch in (0, 1, 2, 3, 4, 5, 7, 8, 11):
+        x = np.zeros((batch,) + t.shape, np.dtype(t.dtype))
+        y = sine_cm.predict_q_many(x, max_batch=4)
+        assert np.asarray(y).shape[0] == batch
+    assert sine_cm.compile_events == events, (
+        "hot path compiled after warmup — the no-retrace guarantee broke")
+
+
+def test_weak_type_lint(graphs):
+    plan = ExecutionPlan.build(graphs["sine"], use_pallas=True)
+    assert lint_weak_types(plan) == []
+    fc0 = sorted(plan.folded)[0]
+    broken = dict(plan.folded)
+    broken[fc0] = dataclasses.replace(broken[fc0], s_y=0.5)  # python float
+    bad = ExecutionPlan(plan.graph, broken, plan.layout, {}, True)
+    assert any(f.code == "R010" for f in lint_weak_types(bad))
+
+
+# ------------------------------------------------------------ pad budget --
+
+@pytest.mark.parametrize("name", ["sine", "speech"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_pad_budget_equals_traced(graphs, name, use_pallas):
+    plan = ExecutionPlan.build(graphs[name], use_pallas=use_pallas)
+    for batched, bucket in ((False, 1), (True, 2)):
+        budget = pad_budget(plan, batched=batched, bucket=bucket)
+        assert budget.enforceable
+        traced = measured_pads(plan, batched=batched, bucket=bucket)
+        assert budget.total == traced, (
+            name, use_pallas, batched, bucket, budget.items, traced)
+
+
+def test_pad_budget_flags_op_knocked_off_plan(graphs):
+    plan = ExecutionPlan.build(graphs["sine"], use_pallas=True)
+    layouts = dict(plan.layout.layouts)
+    layouts.pop(sorted(layouts)[0])
+    broken = ExecutionPlan(plan.graph, plan.folded,
+                           dataclasses.replace(plan.layout,
+                                               layouts=layouts),
+                           plan.paged, True)
+    info, findings = audit_pads(broken)
+    assert any(f.code == "B004" for f in errors(findings))
+    assert info["missed_plan"]
+
+
+# ------------------------------------------------------------ CLI / e2e --
+
+def test_audit_plan_end_to_end(graphs):
+    plan = ExecutionPlan.build(graphs["sine"], use_pallas=True)
+    rep = audit_plan("sine", plan, max_batch=4)
+    assert rep.ok, [str(f) for f in errors(rep.findings)]
+    routes = {r.route for r in rep.routes}
+    assert {"per-call", "batched[b=1]", "batched[b=2]",
+            "batched[b=4]"} <= routes
+    doc = to_json([rep])
+    assert '"ok": true' in doc
+    md = to_markdown([rep])
+    assert "sine" in md and "no-retrace" in md and "proved" in md
+
+
+def test_selftest_catches_every_seeded_plan():
+    assert selftest(verbose=False) == []

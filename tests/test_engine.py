@@ -169,3 +169,57 @@ def test_quantization_tracks_float_on_trained_scale_model():
         q = np.asarray(CompiledModel(qg).predict(x))
         errs.append(np.abs(f - q).max())
     assert np.median(errs) < 0.25, errs
+
+
+# --------------------------------------------------- bucket edge cases --
+
+def test_bucket_edge_cases_total_on_nonnegative():
+    """Regression: bucket_for(0) used to return 2 via a bit_length
+    underflow on -1; empty batches now map to the smallest executable and
+    negative batches are a contract violation, not silent nonsense."""
+    from repro.core.engine import (bucket_floor, bucket_for,
+                                   dispatched_bucket_rows)
+    assert bucket_for(0) == bucket_for(1) == 1
+    assert [bucket_for(b) for b in (2, 3, 4, 5, 8, 9)] == [2, 4, 4, 8, 8, 16]
+    assert bucket_floor(0) == bucket_floor(1) == 1
+    assert [bucket_floor(b) for b in (2, 3, 4, 7, 8)] == [2, 2, 4, 4, 8]
+    for fn in (bucket_for, bucket_floor):
+        with pytest.raises(ValueError):
+            fn(-1)
+    assert dispatched_bucket_rows(0) == 0
+    assert dispatched_bucket_rows(0, max_batch=4) == 0
+    # non-power-of-two max_batch clamps chunks to its bucket floor
+    assert dispatched_bucket_rows(11, max_batch=6) == 4 + 4 + 4
+    assert dispatched_bucket_rows(5, max_batch=6) == 4 + 1
+
+
+@settings(max_examples=40)
+@given(batch=st.integers(0, 513), max_batch=st.integers(1, 64))
+def test_bucket_invariants_property(batch, max_batch):
+    from repro.core.engine import (bucket_floor, bucket_for,
+                                   dispatched_bucket_rows)
+    bf = bucket_for(batch)
+    assert bf >= max(1, batch) and bf & (bf - 1) == 0
+    if batch >= 1:
+        assert bf < 2 * batch or batch == 0 or bf == 1
+    fl = bucket_floor(batch)
+    assert fl <= max(1, batch) and fl & (fl - 1) == 0
+    rows = dispatched_bucket_rows(batch, max_batch=max_batch)
+    assert (rows == 0) == (batch == 0)
+    assert rows >= batch
+    # never pads past one step's bucket worth of waste
+    assert rows < batch + bucket_floor(max_batch) or batch == 0
+
+
+def test_predict_q_many_empty_batch_no_compile():
+    """Batch 0 returns empty rows without touching any cache (the staged
+    batch-0 pad key is unreachable by construction)."""
+    rng = np.random.default_rng(5)
+    g = _mlp(rng, dims=(4, 8, 3))
+    qg = quantize_graph(g, [rng.normal(size=(2, 4)).astype("f")
+                            for _ in range(8)])
+    m = CompiledModel(qg)
+    events = m.compile_events
+    y = m.predict_q_many(np.zeros((0, 2, 4), np.int8), max_batch=4)
+    assert y.shape == (0, 2, 3) and m.compile_events == events
+    assert m.bucket_sizes() == () and m.staged_pad_keys() == ()

@@ -137,3 +137,17 @@ def test_mixed_boundaries_pallas_paged_batched():
     yb = np.asarray(cm.predict(xb))
     for i in range(5):
         np.testing.assert_array_equal(yb[i], np.asarray(cm.predict(xb[i])))
+
+
+def test_pad_budget_reproduces_person_pin(person_q):
+    """The plan auditor derives the same structural pad count the test
+    above pins by hand (entry lane pads + SAME halos + im2col row
+    alignment) — the hand-derived formula now has a single authoritative
+    derivation in ``repro.analysis.budget`` that the traced jaxpr must
+    match exactly."""
+    from repro.analysis import measured_pads, pad_budget
+    qg, _ = person_q
+    cm = CompiledModel(qg, use_pallas=True)
+    budget = pad_budget(cm.exec_plan)
+    assert budget.enforceable and not budget.missed
+    assert budget.total == measured_pads(cm.exec_plan) == 28

@@ -182,3 +182,21 @@ def test_predict_q_many_splits_on_bucket_boundaries():
     y21 = np.asarray(cm.predict_q_many(qx21, max_batch=6))
     assert cm.bucket_sizes() == (1, 2, 4)
     np.testing.assert_array_equal(y21[:20], y)
+
+
+def test_pad_budget_reproduces_batched_person_pins(person_batched):
+    """Auditor-derived pad budgets for the batched person buckets equal
+    the traced pad counts for every served bucket — including the b=1
+    (27: im2col rows already align at some layers) vs b>=2 (25) split the
+    hand-derived formula above only pins at one bucket."""
+    from repro.analysis import measured_pads, pad_budget
+    qg, cm = person_batched
+    ep = cm.exec_plan
+    for bucket in (1, 2, 4):
+        budget = pad_budget(ep, batched=True, bucket=bucket)
+        assert budget.enforceable and not budget.missed
+        assert budget.total == measured_pads(ep, batched=True,
+                                             bucket=bucket), \
+            (bucket, budget.items)
+    assert pad_budget(ep, batched=True, bucket=1).total == 27
+    assert pad_budget(ep, batched=True, bucket=4).total == 25

@@ -268,3 +268,100 @@ def test_concurrent_warmup_and_compile_single_instance():
     assert all(a is aots[0] for a in aots)  # one per-call executable
     exes = [cm.compile_batched(b) for b in (1, 2, 4)]
     assert len({id(e) for e in exes}) == 3  # one executable per bucket
+
+
+# -------------------------------------------------- close idempotence --
+
+def test_executor_close_idempotent_and_terminal():
+    ex = ThreadPoolExecutorBackend(max_workers=1)
+    assert not ex.closed
+    ex.close()
+    ex.close()  # second close: no raise, no pool to re-shutdown
+    assert ex.closed
+
+    async def body():
+        with pytest.raises(RuntimeError):
+            await ex.run(lambda xs: xs, np.float32([1]))
+    run(body())
+    # InlineExecutor has nothing to release: close is a no-op and
+    # ``closed`` stays False ("nothing to release" != "released")
+    inline = InlineExecutor()
+    inline.close()
+    inline.close()
+    assert not inline.closed
+
+
+def test_batcher_close_races_are_single_effect():
+    """Two closes racing each other — one with rows still on the
+    executor — must award the drain to exactly one closer: no request is
+    cancelled twice, no metric double-counts, and every admitted request
+    ends in exactly one terminal state."""
+    release = threading.Event()
+    started = threading.Event()
+
+    def infer(xs):
+        started.set()
+        assert release.wait(10), "test deadlock: release never set"
+        return xs * 2
+
+    ex = ThreadPoolExecutorBackend(max_workers=1)
+
+    async def body():
+        b = MicroBatcher(infer, name="race", max_batch=2, max_delay_s=10.0,
+                         max_queue=8, executor=ex)
+        b.start()
+        flight = [b.submit(np.float32([i])) for i in range(2)]  # dispatches
+        await asyncio.get_running_loop().run_in_executor(
+            None, started.wait, 10)
+        assert b.in_flight_rows == 2
+        pending = b.submit(np.float32([7]))  # coalesced behind the flight
+        release.set()
+        await asyncio.gather(b.close(), b.close())  # concurrent closers
+        assert b.closed
+        await b.close()  # and a third, after the fact
+        ys = [np.asarray(await f) for f in flight]
+        assert [float(y[0]) for y in ys] == [0.0, 2.0]
+        assert float(np.asarray(await pending)[0]) == 14.0
+        m = b.metrics
+        assert m.submitted == 3 and m.completed == 3
+        assert m.cancelled == 0 and m.failed == 0 and m.preempted == 0
+        assert m.inflight_rows == 0 and b.in_flight_rows == 0
+    run(body())
+    ex.close()
+
+
+def test_batcher_close_no_drain_counts_each_pending_once():
+    async def body():
+        b = MicroBatcher(lambda xs: xs, name="nodrain", max_batch=8,
+                         max_delay_s=10.0, max_queue=8)
+        b.start()
+        futs = [b.submit(np.float32([i])) for i in range(3)]
+        await asyncio.gather(b.close(drain=False), b.close(drain=False))
+        assert all(f.cancelled() for f in futs)
+        m = b.metrics
+        assert m.submitted == 3 and m.cancelled == 3 and m.completed == 0
+        assert m.submitted == m.completed + m.cancelled + m.failed \
+            + m.preempted
+    run(body())
+
+
+def test_registry_stop_idempotent(sine_model):
+    ex = ThreadPoolExecutorBackend(max_workers=1)
+
+    async def body():
+        reg = ServingRegistry(executor=ex)
+        reg.register("sine", sine_model, max_batch=2, max_delay_s=10.0)
+        reg.start()
+        assert not reg.stopped
+        [y] = await asyncio.gather(
+            reg.submit("sine", _sine_inputs(sine_model, 1)[0]))
+        assert np.asarray(y).shape[0] == 1
+        await asyncio.gather(reg.stop(), reg.stop())  # racing stops
+        assert reg.stopped and ex.closed
+        await reg.stop()  # terminal: returns immediately, nothing re-closed
+        with pytest.raises(RuntimeError):
+            await reg.submit("sine", _sine_inputs(sine_model, 1)[0])
+        m = reg.metrics("sine")
+        assert m.submitted == m.completed + m.cancelled + m.failed \
+            + m.preempted
+    run(body())

@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Thin wrapper for the static plan auditor.
+
+  tools/audit.py [--models sine,speech,person] [--max-batch N]
+                 [--json PATH] [--markdown PATH] [--selftest]
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis`` — kept so the
+audit is runnable from the repo root without exporting PYTHONPATH (CI
+calls the module form via tools/check.sh).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

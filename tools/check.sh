@@ -1,19 +1,46 @@
 #!/usr/bin/env bash
 # Full local/CI gate:
-#   1. tier-1 test suite (ROADMAP.md contract)
-#   2. fast benchmark run -> fresh BENCH json
-#   3. bench regression check against the committed baseline:
+#   1. lint + types (ruff/mypy when installed; CI installs them)
+#   2. static plan audit: verifier + arena liveness + no-retrace proof +
+#      pad budgets over every paper model, both engine routes — an
+#      unverifiable, retrace-prone, or over-budget plan fails here,
+#      before anything executes; --selftest proves the auditor still
+#      catches seeded bad plans
+#   3. tier-1 test suite (ROADMAP.md contract)
+#   4. fast benchmark run -> fresh BENCH json
+#   5. bench regression check against the committed baseline:
 #      record names must all still be produced, every speedup ratio
 #      (*_speedup / *_vs_* records, incl. serve/*_offloop_vs_inline) must
-#      stay >= 1.0, and every serve *_slo record must carry per-class
-#      SLO attainment — a layout, batching, executor-pipelining, or
-#      priority-scheduling regression fails the Actions gate here
+#      stay >= 1.0, every serve *_slo record must carry per-class
+#      SLO attainment, and every memory/*_arena_peak record must keep its
+#      static/measured ratio within 10% — a layout, batching,
+#      executor-pipelining, priority-scheduling, or arena-model
+#      regression fails the Actions gate here
 #
 #   tools/check.sh [--skip-tests]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== lint + types (ruff / mypy) =="
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src/repro/analysis tools/audit.py tools/check_bench.py
+else
+    echo "ruff not installed; skipping (CI installs it)"
+fi
+if command -v mypy >/dev/null 2>&1; then
+    mypy src/repro/analysis
+else
+    echo "mypy not installed; skipping (CI installs it)"
+fi
+
+echo "== static plan audit =="
+mkdir -p results
+python -m repro.analysis --selftest
+python -m repro.analysis --max-batch 4 \
+    --json results/audit.json --markdown results/audit.md \
+    || { echo "plan audit FAILED (see results/audit.md)"; exit 1; }
 
 if [[ "${1:-}" != "--skip-tests" ]]; then
     echo "== tier-1 tests =="

@@ -31,6 +31,13 @@
    exercising) that class — the gate fails rather than letting the SLO
    trajectory silently narrow.
 
+5. **Arena-model drift** — every ``memory/*_arena_peak*`` record must
+   carry a ``ratio`` (static peak / measured peak, from the plan
+   auditor's arena-liveness pass) inside [0.9, 1.1]. The static arena
+   bound is a compile-time claim serving relies on; a ratio drifting past
+   10% means the auditor's shape model no longer matches what actually
+   lowers, and the gate fails before the bound misleads anyone.
+
   python tools/check_bench.py BASELINE.json FRESH.json
 """
 from __future__ import annotations
@@ -41,6 +48,8 @@ import sys
 
 SPEEDUP_MARKERS = ("_speedup", "_vs_")
 OFFLOOP_MARKER = "_offloop_vs_inline"
+ARENA_MARKER = "_arena_peak"
+ARENA_BOUNDS = (0.9, 1.1)  # static/measured peak must stay within 10%
 
 
 def _is_slo_record(name: str) -> bool:
@@ -95,6 +104,20 @@ def slo_narrowed(baseline: dict, fresh: dict) -> list:
     return bad
 
 
+def arena_violations(doc: dict) -> list:
+    """(name, ratio) for memory/*_arena_peak* records whose
+    static/measured ratio is absent or outside ARENA_BOUNDS."""
+    lo, hi = ARENA_BOUNDS
+    bad = []
+    for name, rec in sorted(doc.items()):
+        if ARENA_MARKER not in name or not name.startswith("memory/"):
+            continue
+        ratio = rec.get("ratio") if isinstance(rec, dict) else None
+        if not isinstance(ratio, numbers.Real) or not lo <= ratio <= hi:
+            bad.append((name, ratio))
+    return bad
+
+
 def missing_offloop(doc: dict) -> bool:
     """True when serve/ records exist but the executor A/B record is gone."""
     names = set(doc)
@@ -139,6 +162,14 @@ def main(baseline_path: str, fresh_path: str) -> int:
               f"per-class slo_attainment:", file=sys.stderr)
         for name in bad_slo:
             print(f"  - {name}", file=sys.stderr)
+        rc = 1
+    bad_arena = arena_violations(fresh_doc)
+    if bad_arena:
+        print(f"check_bench: FAIL — {len(bad_arena)} arena_peak record(s) "
+              f"with static/measured ratio missing or outside "
+              f"{ARENA_BOUNDS}:", file=sys.stderr)
+        for name, ratio in bad_arena:
+            print(f"  - {name} = {ratio!r}", file=sys.stderr)
         rc = 1
     narrowed = slo_narrowed(baseline_doc, fresh_doc)
     if narrowed:
