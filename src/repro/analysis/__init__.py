@@ -27,7 +27,7 @@ from .report import (ERROR, INFO, WARNING, AuditReport, Finding,
 from .retrace import (audit_retrace, lint_weak_types, reachable_buckets,
                       reachable_chunk_batches, reachable_stage_keys,
                       warmed_buckets, warmed_stage_keys)
-from .verify import verify_plan
+from .verify import static_output_bounds, verify_plan
 
 __all__ = [
     "ERROR", "INFO", "WARNING",

@@ -290,6 +290,41 @@ def _check_route(plan: ExecutionPlan) -> List[Finding]:
     return out
 
 
+def static_output_bounds(plan: ExecutionPlan) -> dict:
+    """Compile-time validity contract for every graph output: ``{tensor id:
+    (dtype, lo, hi)}``.
+
+    ``lo``/``hi`` are the tightest static bounds the plan proves for the
+    output's values on EVERY route (the routes share one folding, so one
+    bound covers pallas/compiled/reference alike): the dtype's
+    representable range, narrowed by the producing op's folded fused-
+    activation clamp (Eq. 4/7/10's static ``clamp_bounds``) when one is
+    folded. The serving resilience layer uses this as its output-validity
+    guard — a dispatch returning the wrong dtype, NaN/inf, or values
+    outside these bounds is treated as a fault, exactly like a raised
+    exception."""
+    from repro.core.ops_ref import clamp_bounds
+
+    g = plan.graph
+    producer = {op.outputs[0]: i for i, op in enumerate(g.ops)}
+    out = {}
+    for tid in g.outputs:
+        t = g.tensor(tid)
+        dt = np.dtype(t.dtype)
+        if np.issubdtype(dt, np.integer):
+            info = np.iinfo(dt)
+            lo, hi = float(info.min), float(info.max)
+        else:
+            lo, hi = float("-inf"), float("inf")
+        i = producer.get(tid)
+        fc = plan.folded.get(i) if i is not None else None
+        if fc is not None:
+            clo, chi = clamp_bounds(fc, g.ops[i].attrs.get("fused", "NONE"))
+            lo, hi = max(lo, clo), min(hi, chi)
+        out[tid] = (dt, lo, hi)
+    return out
+
+
 def verify_plan(plan: ExecutionPlan) -> List[Finding]:
     """All verifier findings for one plan (structural, inference, quant,
     route). Structural errors suppress the downstream passes for the ops

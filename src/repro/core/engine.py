@@ -235,6 +235,9 @@ class CompiledModel:
         self._aot = None
         self._batched_aot = {}  # bucket size -> AOT executable
         self._stage_pad = {}    # (shape, widths) -> jitted device-side pad
+        self._fallback = None   # use_pallas=False CompiledModel (degradation)
+        self._reference = None  # Interpreter for the "reference" route
+        self._ref_lock = threading.Lock()  # interpreter arena is stateful
         self._compile_lock = threading.Lock()  # guards all cache fills
         # Monotone count of cache fills (per-call AOT, bucket executables,
         # staged pads). Incremented only inside the lock-guarded miss
@@ -464,6 +467,99 @@ class CompiledModel:
         outs = tuple(np.concatenate([np.asarray(c[i]) for c in chunks])
                      for i in range(len(chunks[0])))
         return outs if len(outs) > 1 else outs[0]
+
+    # -- route-selectable dispatch (serving degradation chain) -------------
+    def routes(self) -> tuple:
+        """Dispatch routes this model can serve, primary first — the
+        serving resilience layer's degradation chain:
+
+        * ``"pallas"`` — the MXU kernel route (only when built with
+          ``use_pallas=True``); the primary route in that case.
+        * ``"compiled"`` — the plain XLA compiled route (the primary when
+          ``use_pallas=False``; otherwise the first fallback, lowered from
+          a separate ``use_pallas=False`` plan of the same graph).
+        * ``"reference"`` — the interpreter baseline
+          (:class:`repro.core.interpreter.Interpreter`): pure numpy, no
+          XLA executable involved, the last resort that shares nothing
+          with the compiled routes except the op registry. All three
+          routes are bit-exact on quantized graphs (the registry parity
+          contract), so degrading is invisible in outputs.
+        """
+        return (("pallas", "compiled", "reference") if self.use_pallas
+                else ("compiled", "reference"))
+
+    def _fallback_compiled(self) -> "CompiledModel":
+        """The ``use_pallas=False`` sibling model (lazily built, cached):
+        same graph, same folding, plain-XLA lowering — the first
+        degradation target when the Pallas route misbehaves."""
+        if self._fallback is None:
+            with self._compile_lock:
+                if self._fallback is None:
+                    self._fallback = CompiledModel(
+                        self.graph, use_pallas=False,
+                        paged=dict(self.paged) or None)
+        return self._fallback
+
+    def _reference_interp(self):
+        if self._reference is None:
+            with self._compile_lock:
+                if self._reference is None:
+                    from .interpreter import Interpreter
+                    self._reference = Interpreter(self.graph)
+        return self._reference
+
+    def _predict_q_reference(self, inputs):
+        """Row-by-row interpreter execution of a batched input — the
+        numpy reference route (no XLA dispatch at all). The interpreter's
+        arena is reused across rows, so calls serialize on a lock."""
+        arrs = [np.asarray(a) for a in inputs]
+        batch = arrs[0].shape[0]
+        if batch == 0:
+            outs = tuple(np.empty((0,) + tuple(self.graph.tensor(t).shape),
+                                  np.dtype(self.graph.tensor(t).dtype))
+                         for t in self.graph.outputs)
+            return outs if len(outs) > 1 else outs[0]
+        interp = self._reference_interp()
+        rows = []
+        with self._ref_lock:
+            for i in range(batch):
+                out = interp.invoke_q(*(a[i] for a in arrs))
+                rows.append(out if isinstance(out, tuple) else (out,))
+        outs = tuple(np.stack([r[i] for r in rows])
+                     for i in range(len(rows[0])))
+        return outs if len(outs) > 1 else outs[0]
+
+    def predict_q_routed(self, *inputs, route: Optional[str] = None,
+                         max_batch: Optional[int] = None):
+        """Batched ``predict_q_many`` with an explicit dispatch route.
+
+        ``route=None`` (or the primary route name) is exactly
+        ``predict_q_many``; ``"compiled"`` forces the plain-XLA sibling
+        plan; ``"reference"`` runs the interpreter row by row. This is the
+        engine half of serving's graceful degradation: the resilience
+        layer walks :meth:`routes` when a route keeps failing, and every
+        route returns bit-identical rows on quantized graphs."""
+        names = self.routes()
+        if route is None or route == names[0]:
+            return self.predict_q_many(*inputs, max_batch=max_batch)
+        if route == "compiled":
+            return self._fallback_compiled().predict_q_many(
+                *inputs, max_batch=max_batch)
+        if route == "reference":
+            return self._predict_q_reference(inputs)
+        raise ValueError(f"unknown route {route!r}; available: {names}")
+
+    def warmup_routes(self, max_batch: int) -> "CompiledModel":
+        """Warm every degradation route: the primary bucket executables
+        (``warmup_batched``), the compiled fallback's buckets (when the
+        primary is Pallas), and the reference interpreter's arena — so a
+        breaker trip degrades to an already-compiled route instead of
+        paying a cold compile mid-incident."""
+        self.warmup_batched(max_batch)
+        if self.use_pallas:
+            self._fallback_compiled().warmup_batched(max_batch)
+        self._reference_interp()
+        return self
 
     def predict(self, *inputs):
         """Float in / float out (TFLite-style interface). Accepts either

@@ -25,12 +25,99 @@ Executors never own scheduling state: the batcher counts in-flight rows
 (the joint ``pending + in_flight`` bound) and distributes rows back to
 request futures; ``run`` is just "execute this callable with this batch,
 somewhere".
+
+Two pieces of dispatch-stage *contract* also live here:
+
+* :class:`DispatchCtx` — per-flush metadata the scheduler hands down with
+  the batch (model name, clock, metrics sink, degradation routes, the
+  earliest SLO wall deadline among the rows). Plain backends ignore it;
+  the resilience layer (``repro.serve.resilience``) and the fault
+  injector (``repro.serve.faults``) are built on it.
+* :class:`RowOutcomes` — the mixed-result return type: ``run`` may return
+  a stacked row array (every row succeeded, the classic contract) OR a
+  ``RowOutcomes`` whose rows individually carry a result or an exception,
+  which is how poison-batch bisection reports "row 3 was poison, rows
+  0-2 and 4-7 are fine" instead of failing all eight.
 """
 from __future__ import annotations
 
 import asyncio
+import dataclasses
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass
+class DispatchCtx:
+    """Everything a resilience-aware backend may need about one flush.
+
+    * ``name`` — the served model's name (half of the per-(model, route)
+      circuit-breaker key).
+    * ``rows`` — real request rows in the batch.
+    * ``clock`` — the scheduler's :class:`~repro.serve.scheduler.Clock`;
+      every backend timeout, backoff, and injected latency spike goes
+      through it, so resilience behavior is exact under ``FakeClock``.
+    * ``metrics`` — the model's ``ModelMetrics`` (retry / breaker /
+      degradation / injection counters land here); may be ``None``.
+    * ``routes`` — the degradation chain, primary first (from
+      ``CompiledModel.routes()``); empty when the infer callable is not
+      route-selectable.
+    * ``infer_routed`` — ``infer(xs, route=...)`` when the model supports
+      route-selectable dispatch, else ``None``.
+    * ``deadline`` — absolute clock time of the earliest per-class SLO
+      wall deadline among the batch's rows (``None`` when no row carries
+      one); the resilience layer budgets per-dispatch timeouts and retry
+      backoff from it.
+    * ``max_batch`` — the batcher's bound; bisection splits on the bucket
+      boundaries this implies.
+    * ``route`` — the route this specific dispatch attempt runs (set by
+      the resilience layer per attempt; ``None`` = primary). The fault
+      injector reads it to target a specific route.
+    * ``validate`` — optional output-validity guard ``validate(ys, rows)``
+      raising on NaN/inf, wrong dtype, or out-of-static-range outputs
+      (derived from the plan auditor's static per-route bounds).
+    """
+
+    name: str = "model"
+    rows: int = 1
+    clock: Any = None
+    metrics: Any = None
+    routes: tuple = ()
+    infer_routed: Optional[Callable] = None
+    deadline: Optional[float] = None
+    max_batch: int = 1
+    route: Optional[str] = None
+    validate: Optional[Callable] = None
+
+
+class RowOutcomes:
+    """Per-row results of one flush: each row holds a result OR an error.
+
+    ``ys[i]`` is row ``i``'s output (``None`` while unset/failed);
+    ``errors[i]`` is ``(exception, collateral)`` for failed rows —
+    ``collateral=True`` means the row failed only because it shared a
+    batch with a poison row (the group could not be split further inside
+    the deadline/retry budget), ``False`` means the row failed alone and
+    is itself the poison.
+    """
+
+    __slots__ = ("ys", "errors")
+
+    def __init__(self, n: int):
+        self.ys: list = [None] * n
+        self.errors: dict = {}
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def set_rows(self, idxs, ys) -> None:
+        for i, y in zip(idxs, ys):
+            self.ys[i] = y
+
+    def fail_rows(self, idxs, err: Exception, collateral: bool) -> None:
+        for i in idxs:
+            self.errors[i] = (err, collateral)
 
 
 class InferenceExecutor:
@@ -41,6 +128,11 @@ class InferenceExecutor:
     deterministic fast path free of task hops, and tests use it to pin
     FakeClock semantics. ``close`` releases backend resources and is
     idempotent; a closed backend refuses further dispatches.
+
+    ``ctx`` (a :class:`DispatchCtx`) carries per-flush metadata for
+    resilience-aware backends; plain backends ignore it. ``run`` returns
+    either the stacked ``(rows, ...)`` output array or a
+    :class:`RowOutcomes` with per-row results/errors.
     """
 
     inline = True
@@ -53,7 +145,7 @@ class InferenceExecutor:
         apart from "released"."""
         return False
 
-    async def run(self, infer: Callable, xs):
+    async def run(self, infer: Callable, xs, ctx: Optional[DispatchCtx] = None):
         raise NotImplementedError
 
     def close(self) -> None:
@@ -72,7 +164,8 @@ class InlineExecutor(InferenceExecutor):
 
     inline = True
 
-    async def run(self, infer: Callable, xs):
+    async def run(self, infer: Callable, xs,
+                  ctx: Optional[DispatchCtx] = None):
         return infer(xs)
 
 
@@ -108,7 +201,8 @@ class ThreadPoolExecutorBackend(InferenceExecutor):
     def closed(self) -> bool:
         return self._closed
 
-    async def run(self, infer: Callable, xs):
+    async def run(self, infer: Callable, xs,
+                  ctx: Optional[DispatchCtx] = None):
         if self._closed:
             raise RuntimeError("executor is closed")
         if self._pool is None:
@@ -117,6 +211,19 @@ class ThreadPoolExecutorBackend(InferenceExecutor):
                 thread_name_prefix=self._prefix)
         loop = asyncio.get_running_loop()
         return await loop.run_in_executor(self._pool, infer, xs)
+
+    def recycle(self) -> None:
+        """Tear down the current pool abruptly (no wait) and let the next
+        dispatch lazily build a fresh one — the recovery half of a
+        worker-death fault. Flushes already submitted to the dying pool
+        still run to completion (their callers see results or the
+        injected error, never a silent drop); flushes dispatched after
+        ``recycle`` land on new workers. The fault injector
+        (``repro.serve.faults``) calls this to emulate a worker crashing
+        mid-serve without killing the process."""
+        pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
 
     def close(self) -> None:
         """Idempotent; waits for in-flight flushes so no batch is dropped

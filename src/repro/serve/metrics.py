@@ -30,8 +30,8 @@ class _ClassStats:
     """Bounded per-priority-class accounting (one per class name)."""
 
     __slots__ = ("submitted", "completed", "rejected", "failed", "cancelled",
-                 "preempted", "batched_rows", "slo_hits", "slo_misses",
-                 "_lat")
+                 "preempted", "collateral", "deadline_exceeded",
+                 "batched_rows", "slo_hits", "slo_misses", "_lat")
 
     def __init__(self, window: int):
         self.submitted = 0
@@ -40,6 +40,9 @@ class _ClassStats:
         self.failed = 0
         self.cancelled = 0
         self.preempted = 0
+        self.collateral = 0   # failed rows attributed to a batchmate's
+        #                       poison (a sub-count of failed)
+        self.deadline_exceeded = 0  # expired while PENDING (wall deadline)
         self.batched_rows = 0
         self.slo_hits = 0     # completed with latency <= the class SLO
         self.slo_misses = 0   # completed past the SLO (hits+misses = with-SLO)
@@ -54,6 +57,8 @@ class _ClassStats:
             "failed": self.failed,
             "cancelled": self.cancelled,
             "preempted": self.preempted,
+            "collateral": self.collateral,
+            "deadline_exceeded": self.deadline_exceeded,
             # this class's share of all dispatched rows — the per-class
             # occupancy view: who is actually filling the buckets
             "row_share": (self.batched_rows / total_batched_rows
@@ -78,9 +83,22 @@ class ModelMetrics:
       were folded into ``failed``, which made real inference errors
       indistinguishable from client disconnects. ``preempted`` counts
       pending requests evicted by shed-by-priority admission (a
-      higher-priority newcomer took their queue slot). Every admitted
-      request ends in exactly one of completed/failed/cancelled/preempted,
-      so the derived ``inflight`` balance cannot drift.
+      higher-priority newcomer took their queue slot).
+      ``deadline_exceeded`` counts requests whose per-class SLO wall
+      deadline passed while still pending (scheduler-expired, distinct
+      from caller cancellation); ``collateral`` is a *sub-count* of
+      ``failed``: rows attributed (by poison-batch bisection) to a
+      batchmate's poison rather than their own. Every admitted request
+      ends in exactly one of completed/failed/cancelled/preempted/
+      deadline_exceeded, so the derived ``inflight`` balance cannot
+      drift.
+    * resilience counters — ``retries`` (dispatch attempts beyond the
+      first), ``breaker_transitions`` + ``breaker_states`` (per-route
+      circuit-breaker activity), ``degraded_rows`` / ``degraded_by_route``
+      (rows served off the primary route), and ``injected_faults`` /
+      ``injected_by_kind`` (chaos accounting when a ``FaultInjector`` is
+      installed) — fed by ``repro.serve.resilience`` and
+      ``repro.serve.faults`` through the flush's ``DispatchCtx``.
     * ``batches / batched_rows / bucket_rows`` — flush accounting;
       ``batched_rows / bucket_rows`` is batch occupancy, the fraction of
       bucket slots carrying real requests (1.0 = every AOT-compiled slot
@@ -106,11 +124,21 @@ class ModelMetrics:
         self.failed = 0
         self.cancelled = 0
         self.preempted = 0
+        self.collateral = 0          # sub-count of failed (see _ClassStats)
+        self.deadline_exceeded = 0   # expired while PENDING
         self.batches = 0
         self.batched_rows = 0
         self.bucket_rows = 0
         self.inflight_rows = 0
         self.infer_s = 0.0
+        # resilience-layer counters (repro.serve.resilience / .faults):
+        self.retries = 0             # dispatch attempts beyond the first
+        self.breaker_transitions = 0
+        self.breaker_states: dict = {}   # route -> current breaker state
+        self.degraded_rows = 0       # rows served off the primary route
+        self.degraded_by_route: dict = {}
+        self.injected_faults = 0     # faults the injector actually fired
+        self.injected_by_kind: dict = {}
         self._window = window
         self._lat = deque(maxlen=window)
         self._classes: dict = {}
@@ -131,9 +159,18 @@ class ModelMetrics:
         self.rejected += 1
         self._cls(cls).rejected += 1
 
-    def observe_fail(self, cls: str = "default"):
+    def observe_fail(self, cls: str = "default", collateral: bool = False):
+        """A failed request row. ``collateral=True`` additionally counts
+        the row as collateral damage — it failed only because a batchmate
+        was poison (attribution comes from the resilience layer's
+        bisection; unattributed whole-batch failures count plain
+        ``failed``). ``collateral <= failed`` always."""
         self.failed += 1
-        self._cls(cls).failed += 1
+        st = self._cls(cls)
+        st.failed += 1
+        if collateral:
+            self.collateral += 1
+            st.collateral += 1
 
     def observe_cancelled(self, cls: str = "default"):
         self.cancelled += 1
@@ -142,6 +179,35 @@ class ModelMetrics:
     def observe_preempt(self, cls: str = "default"):
         self.preempted += 1
         self._cls(cls).preempted += 1
+
+    def observe_expired(self, cls: str = "default"):
+        """A request whose SLO wall deadline passed while still PENDING —
+        cancelled by the scheduler (``DeadlineExceededError``), counted
+        distinctly from caller-driven ``cancelled``."""
+        self.deadline_exceeded += 1
+        self._cls(cls).deadline_exceeded += 1
+
+    # -- resilience hooks (called by ResilientExecutor / FaultInjector) ----
+    def observe_retry(self, n: int = 1):
+        """Dispatch attempts beyond the first for some batch segment."""
+        self.retries += int(n)
+
+    def observe_breaker(self, route, old: str, new: str):
+        """A circuit-breaker state transition on ``route``."""
+        self.breaker_transitions += 1
+        self.breaker_states[str(route)] = new
+
+    def observe_degraded(self, rows: int, route):
+        """Rows served off the primary route (degradation chain)."""
+        self.degraded_rows += int(rows)
+        key = str(route)
+        self.degraded_by_route[key] = \
+            self.degraded_by_route.get(key, 0) + int(rows)
+
+    def observe_injected(self, kind: str):
+        """A fault the injector actually fired (chaos accounting)."""
+        self.injected_faults += 1
+        self.injected_by_kind[kind] = self.injected_by_kind.get(kind, 0) + 1
 
     def observe_dispatch(self, rows: int):
         """Rows handed to the executor (in-flight gauge up)."""
@@ -195,11 +261,22 @@ class ModelMetrics:
             "failed": self.failed,
             "cancelled": self.cancelled,
             "preempted": self.preempted,
+            "collateral": self.collateral,
+            "deadline_exceeded": self.deadline_exceeded,
+            "retries": self.retries,
+            "breaker_transitions": self.breaker_transitions,
+            "breaker_states": dict(self.breaker_states),
+            "degraded_rows": self.degraded_rows,
+            "degraded_by_route": dict(self.degraded_by_route),
+            "injected_faults": self.injected_faults,
+            "injected_by_kind": dict(self.injected_by_kind),
             # submitted counts admitted requests only (rejects raise before
             # enqueue), so rejected is NOT part of the inflight balance;
-            # every other terminal state is
+            # every other terminal state is (collateral is a sub-count of
+            # failed, not a state of its own)
             "inflight": (self.submitted - self.completed - self.failed
-                         - self.cancelled - self.preempted),
+                         - self.cancelled - self.preempted
+                         - self.deadline_exceeded),
             "inflight_rows": self.inflight_rows,
             "batches": self.batches,
             "throughput_rps": self.completed / elapsed,

@@ -150,21 +150,29 @@ class ServingRegistry:
                            f"registered: {sorted(self._entries)}") from None
 
     def submit(self, name: str, x, cls: str = "default",
-               deadline_s: Optional[float] = None):
+               deadline_s: Optional[float] = None,
+               wall_deadline_s: Optional[float] = None):
         """Admission-controlled enqueue under priority class ``cls``;
         returns the request's future. Raises ``KeyError`` for
         unregistered models or unknown classes, ``QueueFullError`` when
         the model's bounded queue sheds the request (a lower-priority
-        pending request may be preempted in its favor instead)."""
+        pending request may be preempted in its favor instead).
+        ``wall_deadline_s`` caps the request's end-to-end wall time
+        (defaults to the class's ``slo_s``): still pending past it, the
+        request is expired with ``DeadlineExceededError`` instead of
+        dispatched."""
         if not self._started:
             raise RuntimeError("registry not started (use `async with` "
                                "or call start())")
-        return self._entry(name).batcher.submit(x, cls=cls,
-                                                deadline_s=deadline_s)
+        return self._entry(name).batcher.submit(
+            x, cls=cls, deadline_s=deadline_s,
+            wall_deadline_s=wall_deadline_s)
 
     async def infer(self, name: str, x, cls: str = "default",
-                    deadline_s: Optional[float] = None):
-        return await self.submit(name, x, cls=cls, deadline_s=deadline_s)
+                    deadline_s: Optional[float] = None,
+                    wall_deadline_s: Optional[float] = None):
+        return await self.submit(name, x, cls=cls, deadline_s=deadline_s,
+                                 wall_deadline_s=wall_deadline_s)
 
     # -- dtype helpers (requests travel in graph dtype) --------------------
     def quantize_input(self, name: str, x):

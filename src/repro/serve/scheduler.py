@@ -56,7 +56,8 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.engine import bucket_floor, dispatched_bucket_rows
-from .executor import InferenceExecutor, InlineExecutor
+from .executor import DispatchCtx, InferenceExecutor, InlineExecutor, \
+    RowOutcomes
 from .metrics import ModelMetrics
 
 DEFAULT_CLASS = "default"
@@ -91,6 +92,58 @@ class PreemptedError(QueueFullError):
         self.model = name
         self.cls = cls
         self.depth = depth
+
+
+class DeadlineExceededError(QueueFullError):
+    """A request's end-to-end wall deadline passed while still PENDING.
+
+    The scheduler expires the request (its future gets this error) instead
+    of dispatching work whose answer is already too late — the per-class
+    SLO made load-shedding-by-time. Subclasses :class:`QueueFullError`
+    (the shed/cancel taxonomy root: admitted, never produced a result, not
+    an inference failure) so callers handling shed load handle expiry the
+    same way; counted distinctly (``deadline_exceeded``, not
+    ``cancelled``) in :class:`~repro.serve.metrics.ModelMetrics`.
+    """
+
+    def __init__(self, name: str, cls: str, waited_s: float):
+        RuntimeError.__init__(
+            self, f"{name}: request (class {cls!r}) exceeded its wall "
+                  f"deadline after {waited_s * 1e3:.1f} ms pending")
+        self.model = name
+        self.cls = cls
+        self.depth = 0
+        self.waited_s = waited_s
+
+
+class FlushError(RuntimeError):
+    """One flush's failure, wrapped with its serving context.
+
+    Every request whose flush failed gets a ``FlushError`` carrying the
+    model name, the dispatched bucket size, the number of real rows that
+    shared the batch, and the raw cause (``__cause__`` / ``.cause``) — so
+    a caller can distinguish "my single-row dispatch failed" (``rows ==
+    1``) from "I shared a batch that failed" (``rows > 1``).
+    ``collateral`` refines that when the resilience layer's bisection
+    attributed the failure: ``False`` = this row failed alone (it *is*
+    the poison), ``True`` = it failed only because it could not be
+    separated from a poison batchmate, ``None`` = unattributed (no
+    bisection ran; any row may be the poison).
+    """
+
+    def __init__(self, model: str, bucket: int, rows: int, cause: Exception,
+                 collateral: Optional[bool] = None):
+        blame = {False: "poison row", True: "collateral",
+                 None: "unattributed"}[collateral]
+        super().__init__(
+            f"{model}: flush of {rows} row(s) (bucket {bucket}) failed "
+            f"[{blame}]: {cause!r}")
+        self.model = model
+        self.bucket = bucket
+        self.rows = rows
+        self.cause = cause
+        self.collateral = collateral
+        self.__cause__ = cause
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,13 +224,16 @@ class _Request:
 
     ``dead`` marks lazy heap deletion — preempted entries stay in the heap
     until a pop or peek skips past them, so eviction is O(n) scan + O(1)
-    mark, never a heap rebuild.
+    mark, never a heap rebuild. ``wall`` is the absolute end-to-end wall
+    deadline (``None`` = never expires): a request still PENDING past it
+    is expired with :class:`DeadlineExceededError` instead of dispatched.
     """
 
     __slots__ = ("x", "future", "t", "cls", "priority", "deadline", "seq",
-                 "dead")
+                 "dead", "wall")
 
-    def __init__(self, x, future, t, cls, priority, deadline, seq):
+    def __init__(self, x, future, t, cls, priority, deadline, seq,
+                 wall=None):
         self.x = x
         self.future = future
         self.t = t
@@ -186,6 +242,7 @@ class _Request:
         self.deadline = deadline
         self.seq = seq
         self.dead = False
+        self.wall = wall
 
     def __lt__(self, other: "_Request") -> bool:
         return (self.deadline, self.seq) < (other.deadline, other.seq)
@@ -216,9 +273,19 @@ class MicroBatcher:
                  max_queue: int = 256, clock: Optional[Clock] = None,
                  metrics: Optional[ModelMetrics] = None,
                  classes: Optional[dict] = None,
-                 executor: Optional[InferenceExecutor] = None):
+                 executor: Optional[InferenceExecutor] = None,
+                 infer_routed: Optional[Callable] = None,
+                 routes: tuple = (), validate: Optional[Callable] = None):
         assert max_batch >= 1 and max_queue >= 1
         self._infer = infer
+        # resilience-aware dispatch metadata, handed to the executor via
+        # DispatchCtx on every off-loop flush: a route-selectable infer
+        # (infer_routed(xs, route=...)), the model's degradation chain
+        # (primary first), and an output-validity guard. All optional —
+        # plain executors ignore them.
+        self._infer_routed = infer_routed
+        self._routes = tuple(routes)
+        self._validate = validate
         self.name = name
         self.max_batch = max_batch
         self.max_delay_s = max_delay_s
@@ -252,7 +319,19 @@ class MicroBatcher:
             # only the bucketed batch executables: the batcher always stacks
             # requests, so the unbatched AOT path is never on its hot path
             model.warmup_batched(bucket_floor(max_batch))
+        # route-selectable dispatch + output-validity guard, when the model
+        # provides them (duck-typed stand-ins without exec_plan still work)
+        routed, routes, validate = None, (), None
+        if hasattr(model, "predict_q_routed"):
+            def routed(xs, route=None):
+                return model.predict_q_routed(xs, route=route,
+                                              max_batch=max_batch)
+            routes = model.routes()
+        if getattr(model, "exec_plan", None) is not None:
+            from .resilience import make_output_guard
+            validate = make_output_guard(model.exec_plan)
         return cls(lambda xs: model.predict_q_many(xs, max_batch=max_batch),
+                   infer_routed=routed, routes=routes, validate=validate,
                    **kw)
 
     # -- client side ------------------------------------------------------
@@ -311,10 +390,16 @@ class MicroBatcher:
             heapq.heapify(self._heap)
 
     def submit(self, x, cls: str = DEFAULT_CLASS,
-               deadline_s: Optional[float] = None) -> asyncio.Future:
+               deadline_s: Optional[float] = None,
+               wall_deadline_s: Optional[float] = None) -> asyncio.Future:
         """Enqueue one request under priority class ``cls``; returns a
         future resolving to its output row. ``deadline_s`` overrides the
         class's coalescing delay for this request (seconds from now).
+        ``wall_deadline_s`` is the end-to-end wall deadline (seconds from
+        now; defaults to the class's ``slo_s`` when one is set): a request
+        still PENDING past it is expired with
+        :class:`DeadlineExceededError` instead of dispatched, and the
+        dispatch stage budgets its per-attempt timeouts from it.
 
         At capacity (``pending + in_flight_rows >= max_queue``) admission
         sheds by priority: a strictly lower-priority pending request is
@@ -331,9 +416,12 @@ class MicroBatcher:
         delay = deadline_s if deadline_s is not None else \
             (policy.max_delay_s if policy.max_delay_s is not None
              else self.max_delay_s)
+        wall_s = wall_deadline_s if wall_deadline_s is not None \
+            else policy.slo_s
         fut = asyncio.get_running_loop().create_future()
         req = _Request(x, fut, now, cls, policy.priority, now + delay,
-                       self._seq)
+                       self._seq,
+                       wall=None if wall_s is None else now + wall_s)
         self._seq += 1
         heapq.heappush(self._heap, req)
         self._live += 1
@@ -342,8 +430,10 @@ class MicroBatcher:
         return fut
 
     async def infer(self, x, cls: str = DEFAULT_CLASS,
-                    deadline_s: Optional[float] = None):
-        return await self.submit(x, cls=cls, deadline_s=deadline_s)
+                    deadline_s: Optional[float] = None,
+                    wall_deadline_s: Optional[float] = None):
+        return await self.submit(x, cls=cls, deadline_s=deadline_s,
+                                 wall_deadline_s=wall_deadline_s)
 
     # -- scheduler side ---------------------------------------------------
     def start(self) -> "MicroBatcher":
@@ -397,6 +487,28 @@ class MicroBatcher:
             heapq.heappop(self._heap)
         return self._heap[0].deadline if self._heap else None
 
+    def _expire(self, now: float) -> Optional[float]:
+        """Expire live PENDING requests whose wall deadline has passed
+        (their futures get :class:`DeadlineExceededError`, counted
+        ``deadline_exceeded``); returns the earliest wall deadline still
+        outstanding (``None`` if no live request carries one). Rows
+        already dispatched are never expired — their memory is committed
+        and their result may still arrive in time."""
+        earliest = None
+        for r in self._heap:
+            if r.dead or r.wall is None:
+                continue
+            if r.wall <= now + 1e-9:
+                r.dead = True
+                self._live -= 1
+                if not r.future.done():
+                    r.future.set_exception(DeadlineExceededError(
+                        self.name, r.cls, now - r.t))
+                self.metrics.observe_expired(r.cls)
+            elif earliest is None or r.wall < earliest:
+                earliest = r.wall
+        return earliest
+
     async def _run(self) -> None:
         while True:
             if not self._live:
@@ -405,13 +517,26 @@ class MicroBatcher:
             # The earliest pending deadline anchors the flush timer and is
             # re-read after every arrival: a bucket-full queue flushes
             # immediately, and a late-arriving shorter-deadline class pulls
-            # the flush forward past older laxer deadlines.
+            # the flush forward past older laxer deadlines. Wall (SLO)
+            # deadlines participate too: the timer never sleeps past the
+            # earliest wall deadline, so an expiring request is cancelled
+            # on time even when its coalescing deadline is laxer.
             while 0 < self._live < self.max_batch:
-                remaining = self._earliest_deadline() - self.clock.now()
+                now = self.clock.now()
+                wall = self._expire(now)
+                if not self._live:
+                    break
+                deadline = self._earliest_deadline()
+                if deadline is None:
+                    break
+                if wall is not None:
+                    deadline = min(deadline, wall)
+                remaining = deadline - now
                 if remaining <= 0:
                     break
                 self._arrival.clear()
                 await self._arrival_or_sleep(remaining)
+            self._expire(self.clock.now())
             if self._live:
                 self._flush()
 
@@ -438,6 +563,19 @@ class MicroBatcher:
                 reqs.append(r)
         self._live -= len(reqs)
         return reqs
+
+    def _dispatch_ctx(self, reqs: list) -> DispatchCtx:
+        """Per-flush metadata for resilience-aware executors: the model's
+        degradation routes, the route-selectable infer, the output guard,
+        and the earliest SLO wall deadline among the batch's rows (the
+        dispatch stage budgets timeouts and retry backoff from it)."""
+        walls = [r.wall for r in reqs if r.wall is not None]
+        return DispatchCtx(
+            name=self.name, rows=len(reqs), clock=self.clock,
+            metrics=self.metrics, routes=self._routes,
+            infer_routed=self._infer_routed,
+            deadline=min(walls) if walls else None,
+            max_batch=self.max_batch, validate=self._validate)
 
     def _flush(self) -> None:
         reqs = self._take()
@@ -486,22 +624,42 @@ class MicroBatcher:
     async def _flush_offloop(self, reqs: list, xs) -> None:
         t0 = self.clock.now()
         try:
-            ys = self._validate_rows(
-                await self.executor.run(self._infer, xs), len(reqs))
+            res = await self.executor.run(self._infer, xs,
+                                          ctx=self._dispatch_ctx(reqs))
+            ys = res if isinstance(res, RowOutcomes) else \
+                self._validate_rows(res, len(reqs))
         except Exception as e:
             self._fail(reqs, e)
             return
         finally:
             self._in_flight_rows -= len(reqs)
             self.metrics.observe_retire(len(reqs))
-        self._distribute(reqs, ys, t0, self.clock.now())
+        if isinstance(ys, RowOutcomes):
+            self._distribute_outcomes(reqs, ys, t0, self.clock.now())
+        else:
+            self._distribute(reqs, ys, t0, self.clock.now())
+
+    def _wrap(self, err: Exception, rows: int,
+              collateral: Optional[bool]) -> FlushError:
+        """Wrap a raw dispatch exception in :class:`FlushError` with this
+        flush's serving context (already-wrapped errors pass through)."""
+        if isinstance(err, FlushError):
+            return err
+        return FlushError(self.name,
+                          dispatched_bucket_rows(rows, self.max_batch),
+                          rows, err, collateral=collateral)
 
     def _fail(self, reqs: list, err: Exception) -> None:
-        """Poison batch: the error reaches every request's caller; rows the
-        caller already abandoned count cancelled, not failed."""
+        """Poison batch: the error — wrapped in :class:`FlushError` with
+        model/bucket/row-count context — reaches every request's caller;
+        rows the caller already abandoned count cancelled, not failed.
+        With more than one row the failure is unattributed
+        (``collateral=None``): any row may be the poison."""
+        n = len(reqs)
+        wrapped = self._wrap(err, n, None if n > 1 else False)
         for r in reqs:
             if not r.future.done():
-                r.future.set_exception(err)
+                r.future.set_exception(wrapped)
                 self.metrics.observe_fail(r.cls)
             else:
                 self.metrics.observe_cancelled(r.cls)
@@ -523,3 +681,30 @@ class MicroBatcher:
                                           slo_s=self._policy(r.cls).slo_s)
             else:  # caller cancelled/timed out: distinct from infer failure
                 self.metrics.observe_cancelled(r.cls)
+
+    def _distribute_outcomes(self, reqs: list, out: RowOutcomes,
+                             t0: float, t1: float) -> None:
+        """Mixed per-row distribution: the resilience layer's bisection
+        isolated failures to specific rows, so surviving rows complete
+        normally while failed rows get a :class:`FlushError` carrying
+        their poison/collateral attribution."""
+        by_class: dict = {}
+        for r in reqs:
+            by_class[r.cls] = by_class.get(r.cls, 0) + 1
+        self.metrics.observe_batch(
+            len(reqs), dispatched_bucket_rows(len(reqs), self.max_batch),
+            t1 - t0, by_class=by_class)
+        for i, r in enumerate(reqs):
+            if r.future.done():  # caller abandoned: not failed, not done
+                self.metrics.observe_cancelled(r.cls)
+                continue
+            hit = out.errors.get(i)
+            if hit is None:
+                r.future.set_result(out.ys[i])
+                self.metrics.observe_done(t1 - r.t, cls=r.cls,
+                                          slo_s=self._policy(r.cls).slo_s)
+            else:
+                err, collateral = hit
+                r.future.set_exception(self._wrap(err, 1, collateral))
+                self.metrics.observe_fail(r.cls,
+                                          collateral=bool(collateral))

@@ -23,10 +23,15 @@ def _run_check_bench(tmp_path, baseline: dict, fresh: dict) -> int:
          str(b), str(f)], cwd=_ROOT, capture_output=True).returncode
 
 
+CHAOS_OK = {"serve/sine_chaos_slo": {
+    "median_us": 2.0,
+    "slo_attainment": {"interactive": 0.97, "batch": 0.91}}}
+
+
 def test_check_bench_gates_names_and_ratios(tmp_path):
     speedup = {"runtime/x_speedup": {"ratio": 2.0, "median_us": None}}
     # all names present, speedup >= 1.0, non-speedup ratios ignored
-    ok = {**speedup,
+    ok = {**speedup, **CHAOS_OK,
           "serve/a_vs_b": {"ratio": 1.0, "median_us": None},
           "serve/x_offloop_vs_inline": {"ratio": 1.1, "median_us": None},
           "runtime/paging_slowdown_ratio": {"ratio": 0.4, "median_us": None}}
@@ -45,19 +50,21 @@ def test_check_bench_gates_offloop_presence_and_slo(tmp_path):
                                                 "median_us": None}}
     # serve/ records without the executor A/B record fail...
     assert _run_check_bench(tmp_path, base, {
-        **base, "serve/sine_serial_us": {"median_us": 5.0}}) == 1
+        **base, **CHAOS_OK,
+        "serve/sine_serial_us": {"median_us": 5.0}}) == 1
     # ...with it (ratio >= 1.0) the run passes; runtime-only runs are exempt
     assert _run_check_bench(tmp_path, base, {
-        **base, "serve/sine_serial_us": {"median_us": 5.0}, **offloop}) == 0
+        **base, **CHAOS_OK,
+        "serve/sine_serial_us": {"median_us": 5.0}, **offloop}) == 0
     assert _run_check_bench(tmp_path, base, base) == 0
     # a *_slo record must carry per-class attainment: absent, empty, or
     # non-numeric attainment fails; a complete dict passes
     for bad_att in (None, {}, {"interactive": None}):
-        doc = {**base, **offloop,
+        doc = {**base, **offloop, **CHAOS_OK,
                "serve/sine_mixed_slo": {"median_us": 3.0,
                                         "slo_attainment": bad_att}}
         assert _run_check_bench(tmp_path, base, doc) == 1
-    doc = {**base, **offloop,
+    doc = {**base, **offloop, **CHAOS_OK,
            "serve/sine_mixed_slo": {
                "median_us": 3.0,
                "slo_attainment": {"interactive": 0.97, "batch": 0.74}}}
@@ -68,6 +75,28 @@ def test_check_bench_gates_offloop_presence_and_slo(tmp_path):
         "median_us": 3.0, "slo_attainment": {"interactive": 0.97}}}
     assert _run_check_bench(tmp_path, doc, narrowed) == 1
     assert _run_check_bench(tmp_path, doc, doc) == 0
+
+
+def test_check_bench_gates_chaos_floor(tmp_path):
+    """Gate 6: serve/ runs must carry the fault-injection record, and its
+    interactive goodput must stay >= 0.9."""
+    base = {"runtime/x_us": {"median_us": 1.0}}
+    serve = {**base,
+             "serve/sine_serial_us": {"median_us": 5.0},
+             "serve/sine_offloop_vs_inline": {"ratio": 1.2,
+                                              "median_us": None}}
+    # serve/ records without any *_chaos_slo record fail; runtime-only
+    # runs are exempt
+    assert _run_check_bench(tmp_path, base, serve) == 1
+    assert _run_check_bench(tmp_path, base, base) == 0
+    # with the chaos record above the floor the run passes
+    assert _run_check_bench(tmp_path, base, {**serve, **CHAOS_OK}) == 0
+    # interactive goodput below the 0.9 floor fails, as does a chaos
+    # record that lost its interactive class entirely
+    for att in ({"interactive": 0.42, "batch": 1.0}, {"batch": 1.0}):
+        doc = {**serve, "serve/sine_chaos_slo": {
+            "median_us": 2.0, "slo_attainment": att}}
+        assert _run_check_bench(tmp_path, base, doc) == 1
 
 
 @pytest.mark.slow
@@ -126,6 +155,7 @@ def test_bench_serve_fast_smoke(tmp_path, monkeypatch, capsys):
         "serve/sine_poisson_x4_p95_us",
         "serve/sine_offloop_p95_us", "serve/sine_offloop_vs_inline",
         "serve/sine_mixed_slo",
+        "serve/sine_chaos_slo", "serve/sine_chaos_resilient_vs_raw",
         "serve/speech_poisson_p95_us", "serve/person_poisson_p95_us",
         "serve/sine_batched_planned_us", "serve/sine_batched_percall_us",
         "serve/sine_batched_pads_percall_vs_planned"}
@@ -135,6 +165,14 @@ def test_bench_serve_fast_smoke(tmp_path, monkeypatch, capsys):
     assert set(att) == {"interactive", "batch"}
     assert all(isinstance(v, float) for v in att.values())
     assert doc["serve/sine_offloop_vs_inline"]["ratio"] > 0
+    # the chaos record carries per-class goodput (the interactive floor
+    # itself is check_bench's gate; here only the contract shape, so an
+    # oversubscribed CI runner can't flake this smoke test) and the
+    # resilient-vs-raw ratio is a real value in the ratio field
+    chaos_att = doc["serve/sine_chaos_slo"]["slo_attainment"]
+    assert set(chaos_att) == {"interactive", "batch"}
+    assert all(isinstance(v, float) for v in chaos_att.values())
+    assert doc["serve/sine_chaos_resilient_vs_raw"]["ratio"] > 0
     # the layout A/B records name their route, and the structural pad-op
     # ratio is deterministic (per-call route pays 7 pads per FC vs the
     # planned route's <=1): exactly what tools/check_bench.py gates on

@@ -15,8 +15,9 @@ from repro.core.quantize import quantize_graph
 from repro.configs.paper_models import build_sine
 from repro.serve.metrics import ModelMetrics
 from repro.serve.registry import ServingRegistry
-from repro.serve.scheduler import (ClassPolicy, FakeClock, MicroBatcher,
-                                   PreemptedError, QueueFullError)
+from repro.serve.scheduler import (ClassPolicy, FakeClock, FlushError,
+                                   MicroBatcher, PreemptedError,
+                                   QueueFullError)
 
 
 def run(coro):
@@ -223,8 +224,12 @@ def test_failing_batch_fails_requests_not_scheduler():
             bad = [b.submit(np.float32([i])) for i in range(2)]
             await clock.drain()
             for f in bad:
-                with pytest.raises(ValueError):
+                # the raw error arrives wrapped with its serving context
+                with pytest.raises(FlushError, match="poison batch") as ei:
                     f.result()
+                assert isinstance(ei.value.cause, ValueError)
+                assert ei.value.model == "flaky" and ei.value.rows == 2
+                assert ei.value.collateral is None  # no bisection ran
             ok = b.submit(np.float32([5]))
             await clock.advance(0.010)
             assert np.array_equal(ok.result(), np.float32([10]))
@@ -247,7 +252,7 @@ def test_wrong_shaped_infer_fails_batch_not_scheduler():
             futs = [b.submit(np.float32([i])) for i in range(2)]
             await clock.drain()
             for f in futs:
-                with pytest.raises(ValueError, match="2-row batch"):
+                with pytest.raises(FlushError, match="2-row batch"):
                     f.result()
             assert b.metrics.snapshot(clock.now())["inflight"] == 0
     run(body())
@@ -274,7 +279,7 @@ def test_malformed_request_poisons_batch_not_scheduler():
                    b.submit(np.zeros((3,), np.float32))]
             await clock.drain()
             for f in bad:
-                with pytest.raises(ValueError):
+                with pytest.raises(FlushError, match="same shape"):
                     f.result()
             ok = [b.submit(np.float32([i])) for i in range(2)]
             await clock.drain()

@@ -6,16 +6,23 @@
 #      unverifiable, retrace-prone, or over-budget plan fails here,
 #      before anything executes; --selftest proves the auditor still
 #      catches seeded bad plans
-#   3. tier-1 test suite (ROADMAP.md contract)
-#   4. fast benchmark run -> fresh BENCH json
-#   5. bench regression check against the committed baseline:
+#   3. fault-injection selftest: the chaos harness's scripted scenarios
+#      (retry absorption, route degradation, poison bisection, timeout
+#      budgeting, worker recycling) replayed on a fake clock — the
+#      resilience layer's semantics are proven before the bench leans
+#      on them
+#   4. tier-1 test suite (ROADMAP.md contract)
+#   5. fast benchmark run -> fresh BENCH json
+#   6. bench regression check against the committed baseline:
 #      record names must all still be produced, every speedup ratio
-#      (*_speedup / *_vs_* records, incl. serve/*_offloop_vs_inline) must
-#      stay >= 1.0, every serve *_slo record must carry per-class
-#      SLO attainment, and every memory/*_arena_peak record must keep its
-#      static/measured ratio within 10% — a layout, batching,
-#      executor-pipelining, priority-scheduling, or arena-model
-#      regression fails the Actions gate here
+#      (*_speedup / *_vs_* records, incl. serve/*_offloop_vs_inline and
+#      serve/*_chaos_resilient_vs_raw) must stay >= 1.0, every serve
+#      *_slo record must carry per-class SLO attainment, every
+#      memory/*_arena_peak record must keep its static/measured ratio
+#      within 10%, and the serve/*_chaos_slo record must keep
+#      interactive goodput >= 0.9 under the injected-fault storm — a
+#      layout, batching, executor-pipelining, priority-scheduling,
+#      arena-model, or resilience regression fails the Actions gate here
 #
 #   tools/check.sh [--skip-tests]
 set -euo pipefail
@@ -41,6 +48,9 @@ python -m repro.analysis --selftest
 python -m repro.analysis --max-batch 4 \
     --json results/audit.json --markdown results/audit.md \
     || { echo "plan audit FAILED (see results/audit.md)"; exit 1; }
+
+echo "== fault-injection selftest =="
+python -m repro.serve.faults --selftest
 
 if [[ "${1:-}" != "--skip-tests" ]]; then
     echo "== tier-1 tests =="

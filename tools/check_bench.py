@@ -38,6 +38,18 @@
    10% means the auditor's shape model no longer matches what actually
    lowers, and the gate fails before the bound misleads anyone.
 
+6. **Chaos-resilience floor** — a fresh run with any ``serve/`` records
+   must include a ``*_chaos_slo`` record (the fault-injection A/B going
+   missing is a name regression even before it lands in a baseline), and
+   every ``*_chaos_slo`` record's interactive-class goodput attainment
+   must stay >= 0.9: under the bench's injected transient-fault storm
+   the resilient executor (retries + poison bisection + breakers + route
+   degradation) has to keep serving interactive traffic inside its SLO.
+   Dipping below the floor means resilience stopped absorbing faults —
+   the raw (no-resilience) side of the A/B documents what that collapse
+   looks like in the companion ``*_chaos_resilient_vs_raw`` record,
+   whose >= 1.0 ratio is already held by check 2.
+
   python tools/check_bench.py BASELINE.json FRESH.json
 """
 from __future__ import annotations
@@ -50,6 +62,9 @@ SPEEDUP_MARKERS = ("_speedup", "_vs_")
 OFFLOOP_MARKER = "_offloop_vs_inline"
 ARENA_MARKER = "_arena_peak"
 ARENA_BOUNDS = (0.9, 1.1)  # static/measured peak must stay within 10%
+CHAOS_MARKER = "_chaos_slo"
+CHAOS_CLASS = "interactive"
+CHAOS_FLOOR = 0.9  # interactive goodput under the injected-fault storm
 
 
 def _is_slo_record(name: str) -> bool:
@@ -125,6 +140,30 @@ def missing_offloop(doc: dict) -> bool:
         not any(OFFLOOP_MARKER in n for n in names)
 
 
+def missing_chaos(doc: dict) -> bool:
+    """True when serve/ records exist but the chaos record is gone."""
+    names = set(doc)
+    return any(n.startswith("serve/") for n in names) and \
+        not any(CHAOS_MARKER in n for n in names)
+
+
+def chaos_violations(doc: dict) -> list:
+    """(name, goodput) for ``*_chaos_slo`` records whose interactive-class
+    goodput attainment is absent or below CHAOS_FLOOR. Malformed
+    attainment dicts are already caught by :func:`slo_violations`
+    (``*_chaos_slo`` names are ``*_slo`` names); this check only enforces
+    the resilience floor on the class the storm is meant to protect."""
+    bad = []
+    for name, rec in sorted(doc.items()):
+        if CHAOS_MARKER not in name:
+            continue
+        att = rec.get("slo_attainment") if isinstance(rec, dict) else None
+        val = att.get(CHAOS_CLASS) if isinstance(att, dict) else None
+        if not isinstance(val, numbers.Real) or val < CHAOS_FLOOR:
+            bad.append((name, val))
+    return bad
+
+
 def main(baseline_path: str, fresh_path: str) -> int:
     with open(baseline_path) as f:
         baseline_doc = json.load(f)
@@ -171,6 +210,19 @@ def main(baseline_path: str, fresh_path: str) -> int:
         for name, ratio in bad_arena:
             print(f"  - {name} = {ratio!r}", file=sys.stderr)
         rc = 1
+    if missing_chaos(fresh_doc):
+        print("check_bench: FAIL — serve/ records present but no "
+              f"*{CHAOS_MARKER} record: the fault-injection A/B went "
+              "missing", file=sys.stderr)
+        rc = 1
+    bad_chaos = chaos_violations(fresh_doc)
+    if bad_chaos:
+        print(f"check_bench: FAIL — {len(bad_chaos)} chaos record(s) with "
+              f"{CHAOS_CLASS} goodput missing or below {CHAOS_FLOOR}:",
+              file=sys.stderr)
+        for name, val in bad_chaos:
+            print(f"  - {name} = {val!r}", file=sys.stderr)
+        rc = 1
     narrowed = slo_narrowed(baseline_doc, fresh_doc)
     if narrowed:
         print(f"check_bench: FAIL — {len(narrowed)} *_slo record(s) dropped "
@@ -183,10 +235,12 @@ def main(baseline_path: str, fresh_path: str) -> int:
         n_gated = sum(1 for n in fresh
                       if any(m in n for m in SPEEDUP_MARKERS))
         n_slo = sum(1 for n in fresh if _is_slo_record(n))
+        n_chaos = sum(1 for n in fresh if CHAOS_MARKER in n)
         print(f"check_bench: OK — all {len(baseline)} baseline names "
               f"present ({len(fresh)} total), {n_gated} speedup ratio(s) "
               f">= 1.0, {n_slo} SLO record(s) carrying per-class "
-              f"attainment")
+              f"attainment, {n_chaos} chaos record(s) above the "
+              f"{CHAOS_FLOOR} {CHAOS_CLASS} goodput floor")
     return rc
 
 
