@@ -32,7 +32,8 @@ def median_time_us(fn, iters: int = 100, warmup: int = 3):
 
 
 def csv_line(name: str, us=None, derived: str = "", ci=None,
-             ratio=None, layout_plan=None, slo_attainment=None) -> str:
+             ratio=None, layout_plan=None, slo_attainment=None,
+             stage_breakdown=None) -> str:
     """Print one CSV line and keep a structured record of it.
 
     ``us`` is the record's timing (``median_us``); pass ``None`` for
@@ -46,6 +47,12 @@ def csv_line(name: str, us=None, derived: str = "", ci=None,
     ``slo_attainment`` is a ``{priority_class: attained_fraction}`` dict
     for mixed-priority serving records — ``tools/check_bench.py`` fails a
     ``*_slo`` record whose per-class attainment went missing.
+    ``stage_breakdown`` is the per-stage latency decomposition
+    (``queue_wait_us / pad_us / device_us / retry_us`` mean µs per
+    request) captured by ``repro.obs.trace.Tracer`` — required on every
+    ``serve/*`` record so the trajectory shows *where* a p95 regression
+    lives (queueing vs padding vs device vs retries), not just that it
+    happened.
 
     Every record also captures ``jax.default_backend()`` and whether the
     Pallas kernels run in interpret mode (CPU fallback), so committed
@@ -65,6 +72,9 @@ def csv_line(name: str, us=None, derived: str = "", ci=None,
                     "slo_attainment": (None if slo_attainment is None else
                                        {str(k): float(v) for k, v in
                                         slo_attainment.items()}),
+                    "stage_breakdown": (None if stage_breakdown is None else
+                                        {str(k): float(v) for k, v in
+                                         stage_breakdown.items()}),
                     "derived": derived})
     return line
 

@@ -73,7 +73,8 @@ def main() -> None:
                                 "backend": r["backend"],
                                 "pallas_interpret": r["pallas_interpret"],
                                 "layout_plan": r["layout_plan"],
-                                "slo_attainment": r["slo_attainment"]}
+                                "slo_attainment": r["slo_attainment"],
+                                "stage_breakdown": r["stage_breakdown"]}
                     for r in common.RECORDS
                     if r["name"].startswith(json_prefixes)})
         with open(args.json_out, "w") as f:

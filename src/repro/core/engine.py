@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import engine_event, engine_span
 from . import graph as G
 from . import registry as R
 from .memory import memory_report
@@ -281,6 +282,7 @@ class CompiledModel:
                     lowered = self._fn.lower(*self._input_specs())  # racing
                     self._aot = lowered.compile()                   # callers
                     self.compile_events += 1
+                    engine_event("compile", kind="per_call")
         return self._aot
 
     def compile_batched(self, batch: int):
@@ -307,6 +309,10 @@ class CompiledModel:
                         *self.exec_plan.batched_input_specs(bucket)).compile()
                     self._batched_aot[bucket] = exe
                     self.compile_events += 1
+                    # a traced request paying an AOT cache miss is exactly
+                    # what the serving warm-up promises never happens —
+                    # make it visible per flush
+                    engine_event("compile", kind="bucket", bucket=bucket)
         return exe
 
     def bucket_sizes(self) -> tuple:
@@ -383,6 +389,8 @@ class CompiledModel:
                     fn = jax.jit(lambda a: jnp.pad(a, widths))
                     self._stage_pad[key] = fn
                     self.compile_events += 1
+                    engine_event("compile", kind="stage_pad",
+                                 shape=tuple(shape))
         return fn
 
     def _entry_widths(self, tid, batch: int) -> tuple:
@@ -404,10 +412,15 @@ class CompiledModel:
             a = jnp.asarray(a)  # H2D of the real rows only
             widths = self._entry_widths(tid, batch)
             if any(w for _, w in widths):
-                a = self._staged_pad(a.shape, widths)(a)
+                with engine_span("pad_stage", batch=batch):
+                    a = self._staged_pad(a.shape, widths)(a)
             args.append(a)
-        outs = self.compile_batched(batch)(*args)
-        outs = tuple(np.asarray(o)[:batch] for o in outs)
+        exe = self.compile_batched(batch)
+        # the device span covers the executable call AND the host sync
+        # (np.asarray) — what a request actually waits for
+        with engine_span("device", bucket=bucket_for(batch), rows=batch):
+            outs = exe(*args)
+            outs = tuple(np.asarray(o)[:batch] for o in outs)
         return outs if len(outs) > 1 else outs[0]
 
     def predict_q(self, *inputs):

@@ -76,6 +76,12 @@ class DispatchCtx:
     * ``validate`` — optional output-validity guard ``validate(ys, rows)``
       raising on NaN/inf, wrong dtype, or out-of-static-range outputs
       (derived from the plan auditor's static per-route bounds).
+    * ``trace`` — optional :class:`repro.obs.trace.TraceHandle` for this
+      flush. Trace-aware layers record attempt/retry/validate spans
+      against it; off-loop backends re-enter its thread-local scope on
+      the worker thread (``loop.run_in_executor`` does not carry it
+      over) so the engine's pad/device/compile spans attach to the right
+      flush. ``None`` = tracing off; everything ignores it for free.
     """
 
     name: str = "model"
@@ -88,6 +94,7 @@ class DispatchCtx:
     max_batch: int = 1
     route: Optional[str] = None
     validate: Optional[Callable] = None
+    trace: Any = None
 
 
 class RowOutcomes:
@@ -166,6 +173,11 @@ class InlineExecutor(InferenceExecutor):
 
     async def run(self, infer: Callable, xs,
                   ctx: Optional[DispatchCtx] = None):
+        if ctx is not None and ctx.trace is not None:
+            # resilient stacks bottom out here on the loop thread; enter
+            # the flush's trace scope so engine spans attach to it
+            with ctx.trace.scope():
+                return infer(xs)
         return infer(xs)
 
 
@@ -210,6 +222,10 @@ class ThreadPoolExecutorBackend(InferenceExecutor):
                 max_workers=self._max_workers,
                 thread_name_prefix=self._prefix)
         loop = asyncio.get_running_loop()
+        if ctx is not None and ctx.trace is not None:
+            # run_in_executor does not carry the trace scope to the worker
+            # thread; re-enter it there so engine spans reach this flush
+            infer = ctx.trace.bind(infer)
         return await loop.run_in_executor(self._pool, infer, xs)
 
     def recycle(self) -> None:

@@ -59,6 +59,13 @@ class _ClassStats:
             "preempted": self.preempted,
             "collateral": self.collateral,
             "deadline_exceeded": self.deadline_exceeded,
+            # same exactly-one-terminal-state balance the model-level
+            # snapshot derives: admitted minus every terminal. Non-zero
+            # only while requests are genuinely pending/in flight; a
+            # chaos storm that drains must leave every class at 0.
+            "inflight": (self.submitted - self.completed - self.failed
+                         - self.cancelled - self.preempted
+                         - self.deadline_exceeded),
             # this class's share of all dispatched rows — the per-class
             # occupancy view: who is actually filling the buckets
             "row_share": (self.batched_rows / total_batched_rows

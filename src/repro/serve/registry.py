@@ -62,11 +62,14 @@ class ServingRegistry:
     def __init__(self, *, clock: Optional[Clock] = None, max_batch: int = 32,
                  max_delay_s: float = 0.002, max_queue: int = 256,
                  executor: Optional[InferenceExecutor] = None,
-                 classes: Optional[dict] = None):
+                 classes: Optional[dict] = None, tracer=None):
         self.clock = clock or Clock()
         self.executor = executor
+        # one repro.obs.Tracer shared by every batcher (None = tracing off)
+        self.tracer = tracer
         self._defaults = dict(max_batch=max_batch, max_delay_s=max_delay_s,
-                              max_queue=max_queue, classes=classes)
+                              max_queue=max_queue, classes=classes,
+                              tracer=tracer)
         self._entries: dict = {}
         self._started = False
         self._stopped = False
@@ -77,7 +80,7 @@ class ServingRegistry:
         """Admit ``model`` (an int8 ``CompiledModel``) under ``name``.
         ``overrides`` replace the registry-level batcher defaults
         (``max_batch`` / ``max_delay_s`` / ``max_queue`` / ``classes`` /
-        ``executor``) for this model."""
+        ``executor`` / ``tracer``) for this model."""
         if name in self._entries:
             raise ValueError(f"model {name!r} already registered")
         kw = {**self._defaults, "executor": self.executor, **overrides}
@@ -198,6 +201,21 @@ class ServingRegistry:
         now = self.clock.now()
         return {e.name: e.batcher.metrics.snapshot(now)
                 for e in self._entries.values()}
+
+    def openmetrics(self) -> str:
+        """OpenMetrics text exposition of every model's metrics (plus the
+        per-stage latency histograms when a tracer is installed) — ready
+        to serve from a scrape endpoint."""
+        from repro.obs.export import openmetrics
+        return openmetrics(self.snapshot(), tracer=self.tracer)
+
+    def telemetry(self) -> dict:
+        """Structured JSON snapshot unifying metrics, trace histograms,
+        and the flight recorder's status (``repro.obs.export``)."""
+        from repro.obs.export import json_snapshot
+        flight = self.tracer.flight if self.tracer is not None else None
+        return json_snapshot(self.snapshot(), tracer=self.tracer,
+                             flight=flight)
 
 
 def build_paper_registry(names=("sine", "speech", "person"), *,

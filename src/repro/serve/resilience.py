@@ -323,16 +323,22 @@ class ResilientExecutor(InferenceExecutor):
                                   out, state)
         finally:
             now = clock.now()
+            handle = ctx.trace
             for route, allowed in state["gate"].items():
                 if not allowed:
                     continue
                 br = self.breaker(ctx.name, route, ctx.metrics)
+                old = br.state
                 if route in state["ok"]:
                     br.record_success(now)
                 elif route in state["fail"]:
                     br.record_failure(now)
                 else:  # cancelled before any outcome: free the probe slot
                     br.release_probe()
+                if handle is not None and br.state != old:
+                    # breaker-open transitions also trigger a flight dump
+                    handle.breaker(str(route or "primary"), old, br.state,
+                                   now)
         if out.ok:
             # classic contract: every row succeeded -> one stacked array
             # (row slices of the per-group results, bit-identical)
@@ -387,13 +393,19 @@ class ResilientExecutor(InferenceExecutor):
         sub = xs if len(idxs) == len(xs) else xs[np.asarray(idxs)]
         routes = self._routes(ctx)
         metrics = ctx.metrics
+        handle = ctx.trace
         last: Optional[Exception] = None
         attempted = False
         for ri, route in enumerate(routes):
             gate = state["gate"]
             if route not in gate:
                 br = self.breaker(ctx.name, route, metrics)
+                old = br.state
                 gate[route] = br.allow(clock.now())
+                if handle is not None and br.state != old:
+                    # open -> half_open transition inside allow()
+                    handle.breaker(str(route or "primary"), old, br.state,
+                                   clock.now())
             if not gate[route]:
                 last = last or BreakerOpenError(ctx.name, routes)
                 continue  # this route is out of rotation; degrade
@@ -407,15 +419,22 @@ class ResilientExecutor(InferenceExecutor):
                 if attempt > 1:
                     if metrics is not None:
                         metrics.observe_retry()
+                    t_b = clock.now()
                     await clock.sleep(
                         self.retry.backoff_s(attempt, self._rng))
+                    if handle is not None:  # backoff wait = the retry span
+                        handle.span("retry", t_b, clock.now(),
+                                    route=str(route or "primary"),
+                                    attempt=attempt, rows=len(idxs))
                 attempted = True
                 timeout = self._timeout_s(
                     ctx, clock.now(),
                     self.retry.max_attempts - attempt + 1)
+                t_a = clock.now()
                 try:
                     ys = await self._attempt(call, sub, ctx, route, clock,
                                              timeout)
+                    t_v = clock.now()
                     if ctx.validate is not None:
                         ctx.validate(ys, len(idxs), ctx.name)
                     else:
@@ -424,15 +443,31 @@ class ResilientExecutor(InferenceExecutor):
                             raise InvalidOutputError(
                                 ctx.name, f"shape {ys.shape} for a "
                                           f"{len(idxs)}-row batch")
+                    if handle is not None:
+                        handle.span("validate", t_v, clock.now(),
+                                    route=str(route or "primary"))
                 except asyncio.CancelledError:
                     raise
                 except Exception as e:
                     state["fail"].add(route)
                     last = e
+                    if handle is not None:
+                        handle.span("attempt", t_a, clock.now(), ok=False,
+                                    route=str(route or "primary"),
+                                    attempt=attempt, rows=len(idxs),
+                                    error=type(e).__name__)
                     continue
                 state["ok"].add(route)
-                if ri > 0 and metrics is not None:
-                    metrics.observe_degraded(len(idxs), route)
+                if handle is not None:
+                    handle.span("attempt", t_a, clock.now(), ok=True,
+                                route=str(route or "primary"),
+                                attempt=attempt, rows=len(idxs))
+                if ri > 0:
+                    if metrics is not None:
+                        metrics.observe_degraded(len(idxs), route)
+                    if handle is not None:
+                        handle.event("degrade", clock.now(),
+                                     route=str(route), rows=len(idxs))
                 out.set_rows(idxs, np.asarray(ys))
                 return (None, True)
         return (last or BreakerOpenError(ctx.name, routes), attempted)

@@ -56,6 +56,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.engine import bucket_floor, dispatched_bucket_rows
+from repro.obs.trace import NULL_TRACER, Tracer
 from .executor import DispatchCtx, InferenceExecutor, InlineExecutor, \
     RowOutcomes
 from .metrics import ModelMetrics
@@ -230,10 +231,10 @@ class _Request:
     """
 
     __slots__ = ("x", "future", "t", "cls", "priority", "deadline", "seq",
-                 "dead", "wall")
+                 "dead", "wall", "rid")
 
     def __init__(self, x, future, t, cls, priority, deadline, seq,
-                 wall=None):
+                 wall=None, rid=None):
         self.x = x
         self.future = future
         self.t = t
@@ -243,6 +244,7 @@ class _Request:
         self.seq = seq
         self.dead = False
         self.wall = wall
+        self.rid = rid  # trace id (None when tracing is off)
 
     def __lt__(self, other: "_Request") -> bool:
         return (self.deadline, self.seq) < (other.deadline, other.seq)
@@ -275,7 +277,8 @@ class MicroBatcher:
                  classes: Optional[dict] = None,
                  executor: Optional[InferenceExecutor] = None,
                  infer_routed: Optional[Callable] = None,
-                 routes: tuple = (), validate: Optional[Callable] = None):
+                 routes: tuple = (), validate: Optional[Callable] = None,
+                 tracer: Optional[Tracer] = None):
         assert max_batch >= 1 and max_queue >= 1
         self._infer = infer
         # resilience-aware dispatch metadata, handed to the executor via
@@ -294,6 +297,9 @@ class MicroBatcher:
         self.executor = executor if executor is not None else InlineExecutor()
         self.metrics = metrics if metrics is not None else \
             ModelMetrics(now=self.clock.now())
+        # lifecycle tracing (repro.obs): NULL_TRACER costs one enabled
+        # check per hook, so untraced serving pays nothing measurable
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.classes = dict(classes or {})
         self.classes.setdefault(DEFAULT_CLASS, ClassPolicy())
         self._heap = []          # EDF priority queue of _Request
@@ -375,6 +381,7 @@ class MicroBatcher:
                 victim = r
         if victim is None or victim.priority >= priority:
             self.metrics.observe_reject(cls)
+            self.tracer.rejected(self.name, cls, self.clock.now())
             raise QueueFullError(self.name, self._live)
         victim.dead = True
         self._live -= 1
@@ -382,6 +389,8 @@ class MicroBatcher:
             victim.future.set_exception(
                 PreemptedError(self.name, victim.cls, self._live))
         self.metrics.observe_preempt(victim.cls)
+        self.tracer.terminal(victim.rid, self.clock.now(), "shed",
+                             reason="preempted")
         # lazy deletion stays bounded: compact once dead entries outnumber
         # the queue cap, so the heap never holds more than 2*max_queue
         # entries no matter how preemption-heavy the overload is
@@ -421,7 +430,8 @@ class MicroBatcher:
         fut = asyncio.get_running_loop().create_future()
         req = _Request(x, fut, now, cls, policy.priority, now + delay,
                        self._seq,
-                       wall=None if wall_s is None else now + wall_s)
+                       wall=None if wall_s is None else now + wall_s,
+                       rid=self.tracer.admit(self.name, cls, now))
         self._seq += 1
         heapq.heappush(self._heap, req)
         self._live += 1
@@ -470,6 +480,8 @@ class MicroBatcher:
                 if not r.future.done():
                     r.future.cancel()
                 self.metrics.observe_cancelled(r.cls)
+                self.tracer.terminal(r.rid, self.clock.now(), "shed",
+                                     reason="cancelled")
             self._heap.clear()
             self._live = 0
         if self._flights:
@@ -505,6 +517,8 @@ class MicroBatcher:
                     r.future.set_exception(DeadlineExceededError(
                         self.name, r.cls, now - r.t))
                 self.metrics.observe_expired(r.cls)
+                self.tracer.terminal(r.rid, now, "expire",
+                                     waited_s=now - r.t)
             elif earliest is None or r.wall < earliest:
                 earliest = r.wall
         return earliest
@@ -564,43 +578,60 @@ class MicroBatcher:
         self._live -= len(reqs)
         return reqs
 
-    def _dispatch_ctx(self, reqs: list) -> DispatchCtx:
+    def _dispatch_ctx(self, reqs: list, handle=None) -> DispatchCtx:
         """Per-flush metadata for resilience-aware executors: the model's
         degradation routes, the route-selectable infer, the output guard,
-        and the earliest SLO wall deadline among the batch's rows (the
-        dispatch stage budgets timeouts and retry backoff from it)."""
+        the earliest SLO wall deadline among the batch's rows (the
+        dispatch stage budgets timeouts and retry backoff from it), and
+        the flush's trace handle."""
         walls = [r.wall for r in reqs if r.wall is not None]
         return DispatchCtx(
             name=self.name, rows=len(reqs), clock=self.clock,
             metrics=self.metrics, routes=self._routes,
             infer_routed=self._infer_routed,
             deadline=min(walls) if walls else None,
-            max_batch=self.max_batch, validate=self._validate)
+            max_batch=self.max_batch, validate=self._validate,
+            trace=handle)
 
     def _flush(self) -> None:
         reqs = self._take()
         if not reqs:
             return
+        t_take = self.clock.now()
+        fid = self.tracer.flush_begin(
+            [r.rid for r in reqs], t_take, model=self.name, rows=len(reqs),
+            bucket=dispatched_bucket_rows(len(reqs), self.max_batch))
+        handle = self.tracer.handle(fid, self.clock)
         try:
             # staging included: a malformed request (wrong sample shape)
             # must poison its batch, not kill the scheduler task
             xs = np.stack([np.asarray(r.x) for r in reqs])
         except Exception as e:
-            self._fail(reqs, e)
+            self._fail(reqs, e, fid=fid)
             return
+        self.tracer.span(fid, "flush_assemble", t_take, self.clock.now(),
+                         rows=len(reqs))
         if self.executor.inline:
             # deterministic fast path: the flush completes synchronously on
             # the event loop (no task hop), exactly the FakeClock contract
             t0 = self.clock.now()
             self.metrics.observe_dispatch(len(reqs))
             try:
-                ys = self._validate_rows(self._infer(xs), len(reqs))
+                if handle is not None:
+                    with handle.scope():  # engine spans land on this flush
+                        ys = self._infer(xs)
+                else:
+                    ys = self._infer(xs)
+                t_disp = self.clock.now()
+                self.tracer.span(fid, "dispatch", t0, t_disp)
+                ys = self._validate_rows(ys, len(reqs))
+                self.tracer.span(fid, "validate", t_disp, self.clock.now())
             except Exception as e:  # poison batch fails its requests, not
-                self._fail(reqs, e)  # the scheduler — the loop keeps serving
-                return
+                self._fail(reqs, e, fid=fid)  # the scheduler — the loop
+                return                        # keeps serving
             finally:
                 self.metrics.observe_retire(len(reqs))
-            self._distribute(reqs, ys, t0, self.clock.now())
+            self._distribute(reqs, ys, t0, self.clock.now(), fid=fid)
         else:
             # pipelined path: hand the batch to the executor and return to
             # coalescing; the flight task distributes when the device call
@@ -608,7 +639,7 @@ class MicroBatcher:
             self._in_flight_rows += len(reqs)
             self.metrics.observe_dispatch(len(reqs))
             task = asyncio.get_running_loop().create_task(
-                self._flush_offloop(reqs, xs))
+                self._flush_offloop(reqs, xs, fid, handle))
             self._flights.add(task)
             task.add_done_callback(self._flights.discard)
 
@@ -621,23 +652,28 @@ class MicroBatcher:
                              f"{ys.shape} for a {take}-row batch")
         return ys
 
-    async def _flush_offloop(self, reqs: list, xs) -> None:
+    async def _flush_offloop(self, reqs: list, xs, fid=None,
+                             handle=None) -> None:
         t0 = self.clock.now()
         try:
-            res = await self.executor.run(self._infer, xs,
-                                          ctx=self._dispatch_ctx(reqs))
+            res = await self.executor.run(
+                self._infer, xs, ctx=self._dispatch_ctx(reqs, handle))
+            self.tracer.span(fid, "dispatch", t0, self.clock.now())
             ys = res if isinstance(res, RowOutcomes) else \
                 self._validate_rows(res, len(reqs))
         except Exception as e:
-            self._fail(reqs, e)
+            self.tracer.span(fid, "dispatch", t0, self.clock.now(),
+                             ok=False)
+            self._fail(reqs, e, fid=fid)
             return
         finally:
             self._in_flight_rows -= len(reqs)
             self.metrics.observe_retire(len(reqs))
         if isinstance(ys, RowOutcomes):
-            self._distribute_outcomes(reqs, ys, t0, self.clock.now())
+            self._distribute_outcomes(reqs, ys, t0, self.clock.now(),
+                                      fid=fid)
         else:
-            self._distribute(reqs, ys, t0, self.clock.now())
+            self._distribute(reqs, ys, t0, self.clock.now(), fid=fid)
 
     def _wrap(self, err: Exception, rows: int,
               collateral: Optional[bool]) -> FlushError:
@@ -649,7 +685,7 @@ class MicroBatcher:
                           dispatched_bucket_rows(rows, self.max_batch),
                           rows, err, collateral=collateral)
 
-    def _fail(self, reqs: list, err: Exception) -> None:
+    def _fail(self, reqs: list, err: Exception, fid=None) -> None:
         """Poison batch: the error — wrapped in :class:`FlushError` with
         model/bucket/row-count context — reaches every request's caller;
         rows the caller already abandoned count cancelled, not failed.
@@ -657,14 +693,33 @@ class MicroBatcher:
         (``collateral=None``): any row may be the poison."""
         n = len(reqs)
         wrapped = self._wrap(err, n, None if n > 1 else False)
+        t = self.clock.now()
+        self.tracer.flush_error(fid, self.name, wrapped, t)
         for r in reqs:
             if not r.future.done():
                 r.future.set_exception(wrapped)
                 self.metrics.observe_fail(r.cls)
+                self.tracer.terminal(r.rid, t, "failed",
+                                     error=type(err).__name__)
             else:
                 self.metrics.observe_cancelled(r.cls)
+                self.tracer.terminal(r.rid, t, "shed", reason="cancelled")
+        self.tracer.flush_end(fid, t)
 
-    def _distribute(self, reqs: list, ys, t0: float, t1: float) -> None:
+    def _complete(self, r: "_Request", y, t1: float, fid) -> None:
+        """One request's success terminal: resolve the future, count it,
+        and (when traced) close its trace + note an SLO miss for the
+        flight recorder's burst trigger."""
+        r.future.set_result(y)
+        slo_s = self._policy(r.cls).slo_s
+        latency = t1 - r.t
+        self.metrics.observe_done(latency, cls=r.cls, slo_s=slo_s)
+        if slo_s is not None and latency > slo_s:
+            self.tracer.slo_miss(self.name, r.cls, t1, latency, slo_s)
+        self.tracer.terminal(r.rid, t1, "complete")
+
+    def _distribute(self, reqs: list, ys, t0: float, t1: float,
+                    fid=None) -> None:
         # bucket rows as actually dispatched: predict_q_many chunks on
         # bucket boundaries, so occupancy reflects real padding, not the
         # bucket_for(take) a single un-chunked call would have paid
@@ -676,14 +731,14 @@ class MicroBatcher:
             t1 - t0, by_class=by_class)
         for r, y in zip(reqs, ys):
             if not r.future.done():
-                r.future.set_result(y)
-                self.metrics.observe_done(t1 - r.t, cls=r.cls,
-                                          slo_s=self._policy(r.cls).slo_s)
+                self._complete(r, y, t1, fid)
             else:  # caller cancelled/timed out: distinct from infer failure
                 self.metrics.observe_cancelled(r.cls)
+                self.tracer.terminal(r.rid, t1, "shed", reason="cancelled")
+        self.tracer.flush_end(fid, t1)
 
     def _distribute_outcomes(self, reqs: list, out: RowOutcomes,
-                             t0: float, t1: float) -> None:
+                             t0: float, t1: float, fid=None) -> None:
         """Mixed per-row distribution: the resilience layer's bisection
         isolated failures to specific rows, so surviving rows complete
         normally while failed rows get a :class:`FlushError` carrying
@@ -697,14 +752,19 @@ class MicroBatcher:
         for i, r in enumerate(reqs):
             if r.future.done():  # caller abandoned: not failed, not done
                 self.metrics.observe_cancelled(r.cls)
+                self.tracer.terminal(r.rid, t1, "shed", reason="cancelled")
                 continue
             hit = out.errors.get(i)
             if hit is None:
-                r.future.set_result(out.ys[i])
-                self.metrics.observe_done(t1 - r.t, cls=r.cls,
-                                          slo_s=self._policy(r.cls).slo_s)
+                self._complete(r, out.ys[i], t1, fid)
             else:
                 err, collateral = hit
-                r.future.set_exception(self._wrap(err, 1, collateral))
+                wrapped = self._wrap(err, 1, collateral)
+                r.future.set_exception(wrapped)
                 self.metrics.observe_fail(r.cls,
                                           collateral=bool(collateral))
+                self.tracer.flush_error(fid, self.name, wrapped, t1)
+                self.tracer.terminal(r.rid, t1, "failed",
+                                     error=type(err).__name__,
+                                     collateral=bool(collateral))
+        self.tracer.flush_end(fid, t1)

@@ -23,17 +23,24 @@ def _run_check_bench(tmp_path, baseline: dict, fresh: dict) -> int:
          str(b), str(f)], cwd=_ROOT, capture_output=True).returncode
 
 
+BD_OK = {"queue_wait_us": 10.0, "pad_us": 1.0, "device_us": 5.0,
+         "retry_us": 0.0}
+TRACE_OK = {"serve/sine_trace_overhead": {
+    "median_us": 100.0, "ratio": 1.01, "stage_breakdown": BD_OK}}
 CHAOS_OK = {"serve/sine_chaos_slo": {
     "median_us": 2.0,
-    "slo_attainment": {"interactive": 0.97, "batch": 0.91}}}
+    "slo_attainment": {"interactive": 0.97, "batch": 0.91},
+    "stage_breakdown": BD_OK}}
 
 
 def test_check_bench_gates_names_and_ratios(tmp_path):
     speedup = {"runtime/x_speedup": {"ratio": 2.0, "median_us": None}}
     # all names present, speedup >= 1.0, non-speedup ratios ignored
-    ok = {**speedup, **CHAOS_OK,
-          "serve/a_vs_b": {"ratio": 1.0, "median_us": None},
-          "serve/x_offloop_vs_inline": {"ratio": 1.1, "median_us": None},
+    ok = {**speedup, **CHAOS_OK, **TRACE_OK,
+          "serve/a_vs_b": {"ratio": 1.0, "median_us": None,
+                           "stage_breakdown": BD_OK},
+          "serve/x_offloop_vs_inline": {"ratio": 1.1, "median_us": None,
+                                        "stage_breakdown": BD_OK},
           "runtime/paging_slowdown_ratio": {"ratio": 0.4, "median_us": None}}
     assert _run_check_bench(tmp_path, speedup, ok) == 0
     # a speedup regressing below parity fails even though the name exists
@@ -47,32 +54,39 @@ def test_check_bench_gates_names_and_ratios(tmp_path):
 def test_check_bench_gates_offloop_presence_and_slo(tmp_path):
     base = {"runtime/x_us": {"median_us": 1.0}}
     offloop = {"serve/sine_offloop_vs_inline": {"ratio": 1.2,
-                                                "median_us": None}}
+                                                "median_us": None,
+                                                "stage_breakdown": BD_OK}}
     # serve/ records without the executor A/B record fail...
     assert _run_check_bench(tmp_path, base, {
-        **base, **CHAOS_OK,
-        "serve/sine_serial_us": {"median_us": 5.0}}) == 1
+        **base, **CHAOS_OK, **TRACE_OK,
+        "serve/sine_serial_us": {"median_us": 5.0,
+                                 "stage_breakdown": BD_OK}}) == 1
     # ...with it (ratio >= 1.0) the run passes; runtime-only runs are exempt
     assert _run_check_bench(tmp_path, base, {
-        **base, **CHAOS_OK,
-        "serve/sine_serial_us": {"median_us": 5.0}, **offloop}) == 0
+        **base, **CHAOS_OK, **TRACE_OK,
+        "serve/sine_serial_us": {"median_us": 5.0,
+                                 "stage_breakdown": BD_OK},
+        **offloop}) == 0
     assert _run_check_bench(tmp_path, base, base) == 0
     # a *_slo record must carry per-class attainment: absent, empty, or
     # non-numeric attainment fails; a complete dict passes
     for bad_att in (None, {}, {"interactive": None}):
-        doc = {**base, **offloop, **CHAOS_OK,
+        doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK,
                "serve/sine_mixed_slo": {"median_us": 3.0,
-                                        "slo_attainment": bad_att}}
+                                        "slo_attainment": bad_att,
+                                        "stage_breakdown": BD_OK}}
         assert _run_check_bench(tmp_path, base, doc) == 1
-    doc = {**base, **offloop, **CHAOS_OK,
+    doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK,
            "serve/sine_mixed_slo": {
                "median_us": 3.0,
-               "slo_attainment": {"interactive": 0.97, "batch": 0.74}}}
+               "slo_attainment": {"interactive": 0.97, "batch": 0.74},
+               "stage_breakdown": BD_OK}}
     assert _run_check_bench(tmp_path, base, doc) == 0
     # per-class name regression: a fresh record silently dropping a class
     # the baseline reported fails, even though the dict is still non-empty
     narrowed = {**doc, "serve/sine_mixed_slo": {
-        "median_us": 3.0, "slo_attainment": {"interactive": 0.97}}}
+        "median_us": 3.0, "slo_attainment": {"interactive": 0.97},
+        "stage_breakdown": BD_OK}}
     assert _run_check_bench(tmp_path, doc, narrowed) == 1
     assert _run_check_bench(tmp_path, doc, doc) == 0
 
@@ -81,10 +95,12 @@ def test_check_bench_gates_chaos_floor(tmp_path):
     """Gate 6: serve/ runs must carry the fault-injection record, and its
     interactive goodput must stay >= 0.9."""
     base = {"runtime/x_us": {"median_us": 1.0}}
-    serve = {**base,
-             "serve/sine_serial_us": {"median_us": 5.0},
+    serve = {**base, **TRACE_OK,
+             "serve/sine_serial_us": {"median_us": 5.0,
+                                      "stage_breakdown": BD_OK},
              "serve/sine_offloop_vs_inline": {"ratio": 1.2,
-                                              "median_us": None}}
+                                              "median_us": None,
+                                              "stage_breakdown": BD_OK}}
     # serve/ records without any *_chaos_slo record fail; runtime-only
     # runs are exempt
     assert _run_check_bench(tmp_path, base, serve) == 1
@@ -95,7 +111,42 @@ def test_check_bench_gates_chaos_floor(tmp_path):
     # record that lost its interactive class entirely
     for att in ({"interactive": 0.42, "batch": 1.0}, {"batch": 1.0}):
         doc = {**serve, "serve/sine_chaos_slo": {
-            "median_us": 2.0, "slo_attainment": att}}
+            "median_us": 2.0, "slo_attainment": att,
+            "stage_breakdown": BD_OK}}
+        assert _run_check_bench(tmp_path, base, doc) == 1
+
+
+def test_check_bench_gates_stage_breakdown_and_trace(tmp_path):
+    """Gate 7: every serve/ record needs a numeric stage_breakdown, the
+    tracing A/B record must exist, and its p95 envelope ratio must stay
+    <= 1.03."""
+    base = {"runtime/x_us": {"median_us": 1.0}}
+    serve = {**base, **CHAOS_OK, **TRACE_OK,
+             "serve/sine_offloop_vs_inline": {"ratio": 1.2,
+                                              "median_us": None,
+                                              "stage_breakdown": BD_OK}}
+    assert _run_check_bench(tmp_path, base, serve) == 0
+    # a serve record whose breakdown is absent, empty, non-numeric, or
+    # missing a stage key fails; runtime records never need one
+    for bad_bd in (None, {}, {"queue_wait_us": "x"},
+                   {"queue_wait_us": 1.0}):
+        doc = {**serve, "serve/sine_serial_us": {
+            "median_us": 5.0, "stage_breakdown": bad_bd}}
+        assert _run_check_bench(tmp_path, base, doc) == 1
+    ok = {**serve, "serve/sine_serial_us": {"median_us": 5.0,
+                                            "stage_breakdown": BD_OK}}
+    assert _run_check_bench(tmp_path, base, ok) == 0
+    # dropping the tracing A/B record entirely fails (same contract as
+    # the offloop/chaos presence gates)
+    gone = {k: v for k, v in serve.items()
+            if "trace_overhead" not in k}
+    assert _run_check_bench(tmp_path, base, gone) == 1
+    # tracing growing past the 3% p95 ceiling fails, as does a trace
+    # record that lost its ratio
+    for bad_ratio in (1.2, None):
+        doc = {**serve, "serve/sine_trace_overhead": {
+            "median_us": 100.0, "ratio": bad_ratio,
+            "stage_breakdown": BD_OK}}
         assert _run_check_bench(tmp_path, base, doc) == 1
 
 
@@ -156,9 +207,21 @@ def test_bench_serve_fast_smoke(tmp_path, monkeypatch, capsys):
         "serve/sine_offloop_p95_us", "serve/sine_offloop_vs_inline",
         "serve/sine_mixed_slo",
         "serve/sine_chaos_slo", "serve/sine_chaos_resilient_vs_raw",
+        "serve/sine_trace_overhead",
         "serve/speech_poisson_p95_us", "serve/person_poisson_p95_us",
         "serve/sine_batched_planned_us", "serve/sine_batched_percall_us",
         "serve/sine_batched_pads_percall_vs_planned"}
+    # every serve record carries the tracer's stage breakdown (gate 7's
+    # contract), and the tracing A/B reports a real envelope ratio (the
+    # <= 1.03 ceiling itself is check_bench's gate, not this smoke's —
+    # an oversubscribed CI runner must not flake here)
+    for name, rec in doc.items():
+        if name.startswith("serve/"):
+            bd = rec["stage_breakdown"]
+            assert set(bd) >= {"queue_wait_us", "pad_us", "device_us",
+                               "retry_us"}, name
+            assert all(isinstance(v, float) for v in bd.values()), name
+    assert doc["serve/sine_trace_overhead"]["ratio"] > 0
     # the executor A/B and SLO records satisfy the new check_bench gates:
     # the mixed-priority record reports attainment for BOTH classes
     att = doc["serve/sine_mixed_slo"]["slo_attainment"]

@@ -11,18 +11,27 @@
 #      budgeting, worker recycling) replayed on a fake clock — the
 #      resilience layer's semantics are proven before the bench leans
 #      on them
-#   4. tier-1 test suite (ROADMAP.md contract)
-#   5. fast benchmark run -> fresh BENCH json
-#   6. bench regression check against the committed baseline:
+#   4. observability selftest: the tracing/flight-recorder/export stack
+#      replayed through the real pipeline on a fake clock — complete
+#      gap-free span trees, stable trace ids across retry/degrade hops,
+#      a parseable flight dump on breaker-open, and a rendering
+#      OpenMetrics exposition, all before the bench relies on
+#      stage_breakdown capture
+#   5. tier-1 test suite (ROADMAP.md contract)
+#   6. fast benchmark run -> fresh BENCH json
+#   7. bench regression check against the committed baseline:
 #      record names must all still be produced, every speedup ratio
 #      (*_speedup / *_vs_* records, incl. serve/*_offloop_vs_inline and
 #      serve/*_chaos_resilient_vs_raw) must stay >= 1.0, every serve
 #      *_slo record must carry per-class SLO attainment, every
 #      memory/*_arena_peak record must keep its static/measured ratio
-#      within 10%, and the serve/*_chaos_slo record must keep
-#      interactive goodput >= 0.9 under the injected-fault storm — a
-#      layout, batching, executor-pipelining, priority-scheduling,
-#      arena-model, or resilience regression fails the Actions gate here
+#      within 10%, the serve/*_chaos_slo record must keep interactive
+#      goodput >= 0.9 under the injected-fault storm, every serve/*
+#      record must carry its stage_breakdown, and the
+#      serve/*_trace_overhead envelope must stay <= 1.03 — a layout,
+#      batching, executor-pipelining, priority-scheduling, arena-model,
+#      resilience, or observability regression fails the Actions gate
+#      here
 #
 #   tools/check.sh [--skip-tests]
 set -euo pipefail
@@ -51,6 +60,9 @@ python -m repro.analysis --max-batch 4 \
 
 echo "== fault-injection selftest =="
 python -m repro.serve.faults --selftest
+
+echo "== observability selftest =="
+python -m repro.obs --selftest
 
 if [[ "${1:-}" != "--skip-tests" ]]; then
     echo "== tier-1 tests =="

@@ -50,6 +50,19 @@
    looks like in the companion ``*_chaos_resilient_vs_raw`` record,
    whose >= 1.0 ratio is already held by check 2.
 
+7. **Stage-breakdown presence + tracing-cost ceiling** — every fresh
+   ``serve/`` record must carry a non-empty numeric ``stage_breakdown``
+   dict (mean queue_wait/pad/device/retry µs per request, captured by
+   ``repro.obs.trace.Tracer``): a serving record that lost its breakdown
+   means the observability layer silently detached from the bench and
+   p95 regressions can no longer be localized to a pipeline stage. The
+   tracing must also stay cheap: every ``*_trace_overhead`` record's
+   ratio (best traced p95 / worst untraced p95, envelope over
+   seed-paired storms) must stay <= 1.03, the
+   "request-lifecycle tracing costs under 3% p95" claim. A fresh run
+   with ``serve/`` records but no ``*_trace_overhead`` record fails the
+   same way a missing executor A/B does.
+
   python tools/check_bench.py BASELINE.json FRESH.json
 """
 from __future__ import annotations
@@ -65,6 +78,9 @@ ARENA_BOUNDS = (0.9, 1.1)  # static/measured peak must stay within 10%
 CHAOS_MARKER = "_chaos_slo"
 CHAOS_CLASS = "interactive"
 CHAOS_FLOOR = 0.9  # interactive goodput under the injected-fault storm
+TRACE_MARKER = "_trace_overhead"
+TRACE_CEIL = 1.03  # traced/untraced p95 envelope: tracing costs <= 3%
+STAGE_KEYS = ("queue_wait_us", "pad_us", "device_us", "retry_us")
 
 
 def _is_slo_record(name: str) -> bool:
@@ -164,6 +180,42 @@ def chaos_violations(doc: dict) -> list:
     return bad
 
 
+def stage_violations(doc: dict) -> list:
+    """Names of ``serve/`` records whose ``stage_breakdown`` is absent or
+    malformed (must be a dict carrying every STAGE_KEYS entry as a
+    number — extra stages are fine, missing ones are not)."""
+    bad = []
+    for name, rec in sorted(doc.items()):
+        if not name.startswith("serve/"):
+            continue
+        bd = rec.get("stage_breakdown") if isinstance(rec, dict) else None
+        if not isinstance(bd, dict) or \
+                not all(isinstance(bd.get(k), numbers.Real)
+                        for k in STAGE_KEYS):
+            bad.append(name)
+    return bad
+
+
+def missing_trace(doc: dict) -> bool:
+    """True when serve/ records exist but the tracing A/B record is gone."""
+    names = set(doc)
+    return any(n.startswith("serve/") for n in names) and \
+        not any(TRACE_MARKER in n for n in names)
+
+
+def trace_violations(doc: dict) -> list:
+    """(name, ratio) for ``*_trace_overhead`` records whose envelope ratio
+    is absent or above TRACE_CEIL — tracing got structurally expensive."""
+    bad = []
+    for name, rec in sorted(doc.items()):
+        if TRACE_MARKER not in name:
+            continue
+        ratio = rec.get("ratio") if isinstance(rec, dict) else None
+        if not isinstance(ratio, numbers.Real) or ratio > TRACE_CEIL:
+            bad.append((name, ratio))
+    return bad
+
+
 def main(baseline_path: str, fresh_path: str) -> int:
     with open(baseline_path) as f:
         baseline_doc = json.load(f)
@@ -223,6 +275,28 @@ def main(baseline_path: str, fresh_path: str) -> int:
         for name, val in bad_chaos:
             print(f"  - {name} = {val!r}", file=sys.stderr)
         rc = 1
+    bad_stage = stage_violations(fresh_doc)
+    if bad_stage:
+        print(f"check_bench: FAIL — {len(bad_stage)} serve record(s) "
+              f"missing a numeric stage_breakdown "
+              f"({'/'.join(STAGE_KEYS)}):", file=sys.stderr)
+        for name in bad_stage:
+            print(f"  - {name}", file=sys.stderr)
+        rc = 1
+    if missing_trace(fresh_doc):
+        print("check_bench: FAIL — serve/ records present but no "
+              f"*{TRACE_MARKER} record: the tracing-cost A/B went missing",
+              file=sys.stderr)
+        rc = 1
+    bad_trace = trace_violations(fresh_doc)
+    if bad_trace:
+        print(f"check_bench: FAIL — {len(bad_trace)} trace-overhead "
+              f"record(s) with p95 envelope ratio missing or above "
+              f"{TRACE_CEIL} (tracing must cost <= 3% p95):",
+              file=sys.stderr)
+        for name, ratio in bad_trace:
+            print(f"  - {name} = {ratio!r}", file=sys.stderr)
+        rc = 1
     narrowed = slo_narrowed(baseline_doc, fresh_doc)
     if narrowed:
         print(f"check_bench: FAIL — {len(narrowed)} *_slo record(s) dropped "
@@ -236,11 +310,15 @@ def main(baseline_path: str, fresh_path: str) -> int:
                       if any(m in n for m in SPEEDUP_MARKERS))
         n_slo = sum(1 for n in fresh if _is_slo_record(n))
         n_chaos = sum(1 for n in fresh if CHAOS_MARKER in n)
+        n_serve = sum(1 for n in fresh if n.startswith("serve/"))
+        n_trace = sum(1 for n in fresh if TRACE_MARKER in n)
         print(f"check_bench: OK — all {len(baseline)} baseline names "
               f"present ({len(fresh)} total), {n_gated} speedup ratio(s) "
               f">= 1.0, {n_slo} SLO record(s) carrying per-class "
               f"attainment, {n_chaos} chaos record(s) above the "
-              f"{CHAOS_FLOOR} {CHAOS_CLASS} goodput floor")
+              f"{CHAOS_FLOOR} {CHAOS_CLASS} goodput floor, {n_serve} "
+              f"serve record(s) with stage breakdowns, {n_trace} "
+              f"trace-overhead ratio(s) <= {TRACE_CEIL}")
     return rc
 
 
