@@ -123,25 +123,25 @@ def main(fast: bool = False):
     lines = []
     res = sine_metrics()
     lines.append(csv_line(
-        "accuracy/sine_mse_fp32", 0.0, f"{res['float']['mse']:.4f}"))
+        "accuracy/sine_mse_fp32", None, f"{res['float']['mse']:.4f}"))
     lines.append(csv_line(
-        "accuracy/sine_mse_int8", 0.0, f"{res['int8_compiled']['mse']:.4f}"))
+        "accuracy/sine_mse_int8", None, f"{res['int8_compiled']['mse']:.4f}"))
     lines.append(csv_line(
-        "accuracy/sine_rmse_int8", 0.0,
+        "accuracy/sine_rmse_int8", None,
         f"{res['int8_compiled']['rmse']:.4f}"))
     lines.append(csv_line(
-        "accuracy/sine_engines_equal", 0.0, str(res["engines_equal"])))
+        "accuracy/sine_engines_equal", None, str(res["engines_equal"])))
     n = 40 if fast else 200
     for model in ("speech", "person"):
         r = classifier_metrics(model, n_eval=n)
         c = r["int8_compiled"]
         lines.append(csv_line(
-            f"accuracy/{model}_f1_int8", 0.0, f"{c['f1']:.4f}"))
+            f"accuracy/{model}_f1_int8", None, f"{c['f1']:.4f}"))
         lines.append(csv_line(
-            f"accuracy/{model}_agreement_vs_fp32", 0.0,
+            f"accuracy/{model}_agreement_vs_fp32", None,
             f"{c['agreement']:.4f}"))
         lines.append(csv_line(
-            f"accuracy/{model}_engines_equal", 0.0, str(r["engines_equal"])))
+            f"accuracy/{model}_engines_equal", None, str(r["engines_equal"])))
     return lines
 
 

@@ -37,10 +37,10 @@ def main(fast: bool = False):
             e_i = watts * (us_i / 1e6) / 3600 * 1e6
             e_c = watts * (us_c / 1e6) / 3600 * 1e6
             lines.append(csv_line(
-                f"energy/{name}_{dev}_interp_uWh", 0.0,
+                f"energy/{name}_{dev}_interp_uWh", None,
                 f"{e_i:.5f} (derived: P*t)"))
             lines.append(csv_line(
-                f"energy/{name}_{dev}_compiled_uWh", 0.0,
+                f"energy/{name}_{dev}_compiled_uWh", None,
                 f"{e_c:.5f} (derived: P*t)"))
     return lines
 

@@ -26,24 +26,24 @@ def main(fast: bool = False):
         rep = memory_report(qg)
         # Fig 9/10 "Flash": weights + code; "RAM": arena vs stack peak
         lines.append(csv_line(
-            f"memory/{name}_weights_kB", 0.0,
+            f"memory/{name}_weights_kB", None,
             f"{rep.weight_bytes/1024:.2f}"))
         lines.append(csv_line(
-            f"memory/{name}_interp_arena_kB", 0.0,
+            f"memory/{name}_interp_arena_kB", None,
             f"{rep.arena_bytes/1024:.2f}"))
         lines.append(csv_line(
-            f"memory/{name}_compiled_stack_peak_kB", 0.0,
+            f"memory/{name}_compiled_stack_peak_kB", None,
             f"{rep.stack_peak_bytes/1024:.2f}"))
         lines.append(csv_line(
-            f"memory/{name}_compiled_stack_fused_kB", 0.0,
+            f"memory/{name}_compiled_stack_fused_kB", None,
             f"{rep.stack_peak_fused/1024:.2f}"))
         lines.append(csv_line(
-            f"memory/{name}_folded_consts_kB", 0.0,
+            f"memory/{name}_folded_consts_kB", None,
             f"{rep.folded_const_bytes/1024:.2f}"))
         cm = CompiledModel(qg)
         mem = cm.memory_analysis()
         lines.append(csv_line(
-            f"memory/{name}_xla_temp_kB", 0.0,
+            f"memory/{name}_xla_temp_kB", None,
             f"{mem.temp_size_in_bytes/1024:.2f}"))
         # Static arena bound from the plan auditor vs the measured walk of
         # the real lowerings — ratio lands in BENCH_runtime.json and

@@ -33,9 +33,9 @@ def _fc_model(n_in=256, n_out=256, batch=4, seed=0):
 def main(fast: bool = False):
     lines = []
     # the paper's own example numbers
-    lines.append(csv_line("paging/atmega_fc32_full_B", 0.0,
+    lines.append(csv_line("paging/atmega_fc32_full_B", None,
                           str(fc_full_bytes(32, 32))))
-    lines.append(csv_line("paging/atmega_fc32_paged32_B", 0.0,
+    lines.append(csv_line("paging/atmega_fc32_paged32_B", None,
                           str(fc_page_bytes(32, 32, 32))))
 
     qg, rng = _fc_model()

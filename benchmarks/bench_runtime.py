@@ -51,6 +51,38 @@ def main(fast: bool = False):
                 f"runtime/{name}_compiled_pallas_us", us_p,
                 f"planned layout; {mode}", ci=(lo, hi), layout_plan=True))
 
+        # Tuned non-interpret lane: the same planned-layout Pallas route
+        # with a REAL Mosaic/Triton compile (interpret=False) when the
+        # backend can lower it, so the trajectory carries at least one
+        # honest kernel-perf number (interpret mode validates semantics,
+        # not speed). Degrades gracefully: on backends whose Pallas is
+        # interpreter-only the record is non-timing with the probe's
+        # error as the explicit skip reason. Emitted for sine in both
+        # fast and full runs so the name set stays stable.
+        if name == "sine":
+            import repro.kernels.ops as ops
+            ok, reason = ops.can_lower_noninterpret()
+            if ok:
+                prev = ops._INTERPRET_OVERRIDE
+                ops.set_interpret(False)
+                try:
+                    cni = CompiledModel(qg, use_pallas=True)
+                    cni.compile()
+                    us_n, lo, hi = median_time_us(
+                        lambda: np.asarray(cni.predict_q(qx)),
+                        iters=max(iters // 4, 5))
+                    lines.append(csv_line(
+                        "runtime/sine_pallas_noninterpret_us", us_n,
+                        "native lowering (interpret=False), planned layout",
+                        ci=(lo, hi), layout_plan=True))
+                finally:
+                    ops.set_interpret(prev)
+            else:
+                lines.append(csv_line(
+                    "runtime/sine_pallas_noninterpret_us", None,
+                    f"skipped: backend cannot lower interpret=False "
+                    f"({reason})"))
+
         # Batched serving: amortize dispatch over B requests in one call.
         # The record name is batch-size-independent (batch goes in the
         # derived column) so fast and full runs emit the same name set —

@@ -20,6 +20,10 @@ work), plus open-loop serving records for the conv models:
   (flush-deadline bound), and how many requests the bounded queue shed.
   Names are identical in --fast and full runs so tools/check.sh can diff
   name sets across runs.
+* ``serve/sine_poisson_noninterpret_p95_us`` — the tuned lane: the same
+  2x storm through a REAL (interpret=False) Pallas compile when the
+  backend lowers it (record carries ``pallas_interpret: false``);
+  otherwise a non-timing record with the probe's explicit skip reason.
 * ``serve/sine_offloop_p95_us`` + ``serve/sine_offloop_vs_inline`` — the
   pipelined-executor A/B: the same overloaded open-loop Poisson storm
   served with the default ``InlineExecutor`` (inference on the event loop,
@@ -77,7 +81,7 @@ from repro.core import CompiledModel, bucket_for
 from repro.core.quantize import quantize_graph
 from repro.configs.paper_models import build_person, build_sine, build_speech
 from repro.obs.trace import Tracer
-from repro.serve.executor import ThreadPoolExecutorBackend
+from repro.serve.executor import ThreadPoolExecutorBackend, default_workers
 from repro.serve.metrics import ModelMetrics
 from repro.serve.scheduler import (ClassPolicy, Clock, MicroBatcher,
                                    QueueFullError)
@@ -245,10 +249,11 @@ def _offloop_ab(cm, qxs, rate_rps: float, n: int, lines: list) -> None:
             executor.close()
         return res
 
+    workers = default_workers()
     inline, off = [], []
     for attempt in range(3):
         inline.append(one(None, 11 + attempt))
-        off.append(one(ThreadPoolExecutorBackend(max_workers=2),
+        off.append(one(ThreadPoolExecutorBackend(max_workers=workers),
                        11 + attempt))
     # bounded noise-recovery: a sub-parity envelope gets two extra off-loop
     # attempts before the record is written — a structural regression (off-
@@ -258,7 +263,7 @@ def _offloop_ab(cm, qxs, rate_rps: float, n: int, lines: list) -> None:
         if max(r["achieved_rps"] for r in off) >= \
                 min(r["achieved_rps"] for r in inline):
             break
-        off.append(one(ThreadPoolExecutorBackend(max_workers=2),
+        off.append(one(ThreadPoolExecutorBackend(max_workers=workers),
                        29 + extra))
     pairs = " ".join(
         f"{o['achieved_rps'] / i['achieved_rps']:.2f}"
@@ -267,8 +272,9 @@ def _offloop_ab(cm, qxs, rate_rps: float, n: int, lines: list) -> None:
     worst_in = min(r["achieved_rps"] for r in inline)
     lines.append(csv_line(
         "serve/sine_offloop_p95_us", best_off["p95_us"],
-        f"threadpool(2) achieved={best_off['achieved_rps']:.0f}rps "
-        f"paired-ratios=[{pairs}]", stage_breakdown=best_off["bd"]))
+        f"threadpool({workers}) achieved={best_off['achieved_rps']:.0f}rps "
+        f"paired-ratios=[{pairs}]", stage_breakdown=best_off["bd"],
+        executor_workers=workers))
     lines.append(csv_line(
         "serve/sine_offloop_vs_inline", None,
         f"capacity envelope: best off-loop "
@@ -276,7 +282,42 @@ def _offloop_ab(cm, qxs, rate_rps: float, n: int, lines: list) -> None:
         f"{worst_in:.0f}rps, 3 seed-paired Poisson storms "
         f"offered={rate_rps:.0f}rps n={n}, paired ratios [{pairs}]",
         ratio=best_off["achieved_rps"] / worst_in,
-        stage_breakdown=best_off["bd"]))
+        stage_breakdown=best_off["bd"], executor_workers=workers))
+
+
+def _noninterpret_serve(qg, qxs, rate_rps: float, n: int,
+                        lines: list) -> None:
+    """Tuned non-interpret serve lane: the 2x-overload Poisson storm
+    served through the Pallas-planned engine with a REAL compile
+    (``interpret=False``), so at least one serving record carries
+    ``pallas_interpret: false`` on backends that can lower it. On
+    interpreter-only backends the record degrades to a non-timing entry
+    with the probe's error as the explicit skip reason (stage_breakdown
+    zeroed — every serve record must still carry one)."""
+    import repro.kernels.ops as ops
+    ok, reason = ops.can_lower_noninterpret()
+    if not ok:
+        lines.append(csv_line(
+            "serve/sine_poisson_noninterpret_p95_us", None,
+            f"skipped: backend cannot lower interpret=False ({reason})",
+            stage_breakdown={"queue_wait_us": 0.0, "pad_us": 0.0,
+                             "device_us": 0.0, "retry_us": 0.0}))
+        return
+    prev = ops._INTERPRET_OVERRIDE
+    ops.set_interpret(False)
+    try:
+        m = CompiledModel(qg, use_pallas=True)
+        tr = Tracer()
+        res = asyncio.run(_open_loop(_batcher(m, tracer=tr), qxs,
+                                     rate_rps, n, seed=67))
+        lines.append(csv_line(
+            "serve/sine_poisson_noninterpret_p95_us", res["p95_us"],
+            f"native lowering (interpret=False), Pallas route: "
+            f"offered={res['offered_rps']:.0f}rps "
+            f"achieved={res['achieved_rps']:.0f}rps shed={res['shed']}",
+            stage_breakdown=_bd(tr)))
+    finally:
+        ops.set_interpret(prev)
 
 
 def _mixed_slo(cm, qxs, rate_rps: float, n: int, lines: list) -> None:
@@ -537,6 +578,11 @@ def main(fast: bool = False):
             f"achieved={res['achieved_rps']:.0f}rps shed={res['shed']} "
             f"occupancy={0.0 if res['occupancy'] is None else res['occupancy']:.2f}",
             stage_breakdown=_bd(tr)))
+
+    # Tuned non-interpret lane (or its explicit skip record on backends
+    # whose Pallas is interpreter-only).
+    _noninterpret_serve(qg, qxs, 2.0 * serial_rps, 300 if fast else 1000,
+                        lines)
 
     # Executor A/B + mixed-priority SLO: the A/B overloads at 8x with the
     # queue opened up (pure service capacity, no admission effects).

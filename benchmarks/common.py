@@ -33,13 +33,18 @@ def median_time_us(fn, iters: int = 100, warmup: int = 3):
 
 def csv_line(name: str, us=None, derived: str = "", ci=None,
              ratio=None, layout_plan=None, slo_attainment=None,
-             stage_breakdown=None) -> str:
+             stage_breakdown=None, executor_workers=None) -> str:
     """Print one CSV line and keep a structured record of it.
 
     ``us`` is the record's timing (``median_us``); pass ``None`` for
-    records that carry no timing. ``ratio`` is for derived dimensionless
+    records that carry no timing — non-timing records MUST carry
+    ``median_us: null`` (never ``0.0``; ``tools/check_bench.py`` pins
+    this schema invariant). ``ratio`` is for derived dimensionless
     values (speedups, slowdowns, throughput ratios) — they land in a
     dedicated field instead of masquerading as a 0.0 µs timing.
+    ``executor_workers`` records the dispatch-stage thread-pool width an
+    off-loop serve measurement ran with (``REPRO_EXECUTOR_WORKERS``
+    overridable), so overhead numbers are comparable across machines.
     ``layout_plan`` records which engine route the measurement ran:
     ``True`` for the compile-time planned-layout route, ``False`` for the
     per-call pad/slice route, ``None`` when no Pallas layout is involved —
@@ -75,6 +80,8 @@ def csv_line(name: str, us=None, derived: str = "", ci=None,
                     "stage_breakdown": (None if stage_breakdown is None else
                                         {str(k): float(v) for k, v in
                                          stage_breakdown.items()}),
+                    "executor_workers": (None if executor_workers is None
+                                         else int(executor_workers)),
                     "derived": derived})
     return line
 

@@ -240,6 +240,20 @@ class CompiledModel:
         self._reference = None  # Interpreter for the "reference" route
         self._ref_lock = threading.Lock()  # interpreter arena is stateful
         self._compile_lock = threading.Lock()  # guards all cache fills
+        # Preallocated host staging buffers for the serving fast path
+        # (``staged_infer``): bucket -> [tuple of per-input arrays]. Each
+        # buffer is born in the bucket's *physical* entry layout —
+        # ``(bucket,) + entry_shape(tid)``, the same statically-verified
+        # shapes the plan auditor bounds the arena with — and kept
+        # zero-filled outside the rows in use, so assembling a flush is a
+        # row copy, never an allocation, a stack, or a device-side pad.
+        self._staging: dict = {}
+        self._staging_lock = threading.Lock()
+        self._staging_cap = 4   # buffer sets kept per bucket
+        # Monotone count of staging-buffer allocations — the slot-pool
+        # analogue of ``compile_events``: after warm-up this should not
+        # move on the serving hot path.
+        self.staging_events = 0
         # Monotone count of cache fills (per-call AOT, bucket executables,
         # staged pads). Incremented only inside the lock-guarded miss
         # paths, so "no compilation happened on the hot path" is directly
@@ -350,6 +364,15 @@ class CompiledModel:
                     shape = (batch,) + tuple(t.shape)
                     self._staged_pad(shape, widths)(
                         jnp.zeros(shape, np.dtype(t.dtype)))
+        # preallocate one staging buffer set per bucket so the serving
+        # fast path's first flush allocates nothing either
+        b = 1
+        while b <= top:
+            with self._staging_lock:
+                if not self._staging.get(b):
+                    self._staging.setdefault(b, []).append(
+                        self._new_staging(b))
+            b *= 2
         return self
 
     @property
@@ -400,6 +423,80 @@ class CompiledModel:
         phys = self.exec_plan.entry_shape(tid)
         return ((0, bucket_for(batch) - batch),) + tuple(
             (0, p - d) for p, d in zip(phys, t.shape))
+
+    # -- preallocated staging (serving fast path) --------------------------
+    def _empty_rows(self):
+        outs = tuple(np.empty((0,) + tuple(self.graph.tensor(t).shape),
+                              np.dtype(self.graph.tensor(t).dtype))
+                     for t in self.graph.outputs)
+        return outs if len(outs) > 1 else outs[0]
+
+    def _new_staging(self, bucket: int) -> tuple:
+        self.staging_events += 1
+        return tuple(np.zeros((bucket,) + self.exec_plan.entry_shape(tid),
+                              np.dtype(self.graph.tensor(tid).dtype))
+                     for tid in self.graph.inputs)
+
+    def acquire_staging(self, bucket: int) -> tuple:
+        """Check out one zero-filled staging buffer set (one array per
+        graph input, shaped ``(bucket,) + entry_shape``). Thread-safe; a
+        cold checkout allocates (counted in ``staging_events``), a warm
+        one reuses — ``warmup_batched`` pre-fills one set per bucket so
+        serving never allocates."""
+        with self._staging_lock:
+            pool = self._staging.get(bucket)
+            if pool:
+                return pool.pop()
+        return self._new_staging(bucket)
+
+    def release_staging(self, bucket: int, bufs: tuple, rows: int) -> None:
+        """Return a staging buffer set, re-zeroing the ``rows`` rows that
+        were written so the pool invariant (zero outside rows in use —
+        exactly what the staged ``jnp.pad`` produces) holds for the next
+        checkout. The pool keeps at most ``_staging_cap`` sets per bucket;
+        extras are dropped to the GC."""
+        for b in bufs:
+            b[:rows] = 0
+        with self._staging_lock:
+            pool = self._staging.setdefault(bucket, [])
+            if len(pool) < self._staging_cap:
+                pool.append(bufs)
+
+    def predict_q_staged(self, bufs: tuple, rows: int):
+        """Run the bucket executable directly on prestaged physical-layout
+        buffers: no reshape, no ``np.stack``, no staged device pad — the
+        buffers already ARE the executable's entry contract. Bit-identical
+        to ``predict_q_many`` on the stacked rows, because a zero-filled
+        physical buffer equals the fused bucket-fill + lane pad output."""
+        bucket = bufs[0].shape[0]
+        exe = self.compile_batched(bucket)
+        args = [jnp.asarray(b) for b in bufs]  # H2D, already padded
+        with engine_span("device", bucket=bucket, rows=rows):
+            outs = exe(*args)
+            outs = tuple(np.asarray(o)[:rows] for o in outs)
+        return outs if len(outs) > 1 else outs[0]
+
+    def staged_infer(self, rows: list):
+        """Serving fast-path flush: assemble single-sample ``rows`` of a
+        single-input graph straight into a pooled staging buffer and run
+        the bucket executable on it. This is the zero-allocation analogue
+        of ``predict_q_many(np.stack(rows))`` for flushes that fit one
+        bucket — same executable, bit-identical outputs."""
+        (tid,) = self.graph.inputs  # serving contract: single-input graph
+        t = self.graph.tensor(tid)
+        n = len(rows)
+        if n == 0:
+            return self._empty_rows()
+        bucket = bucket_for(n)
+        bufs = self.acquire_staging(bucket)
+        try:
+            dst = bufs[0]
+            window = tuple(slice(0, d) for d in t.shape)  # logical region
+            for i, row in enumerate(rows):
+                dst[(i,) + window] = np.asarray(row, t.dtype).reshape(t.shape)
+            return self.predict_q_staged(bufs, n)
+        finally:
+            self.release_staging(bucket, bufs, n)
 
     def _predict_q_batched(self, inputs):
         batch = np.asarray(inputs[0]).shape[0]
@@ -462,10 +559,7 @@ class CompiledModel:
             # An empty flush dispatches nothing (and in particular never
             # touches an unwarmed batch-0 stage-pad key): return empty
             # rows of the output shapes/dtypes directly.
-            outs = tuple(np.empty((0,) + tuple(self.graph.tensor(t).shape),
-                                  np.dtype(self.graph.tensor(t).dtype))
-                         for t in self.graph.outputs)
-            return outs if len(outs) > 1 else outs[0]
+            return self._empty_rows()
         # Split whenever the batch exceeds the largest exactly-fillable
         # bucket — NOT only when it exceeds max_batch: a serving flush of
         # max_batch=6 rows must drain as 4+2 exact buckets, never pad its
@@ -528,10 +622,7 @@ class CompiledModel:
         arrs = [np.asarray(a) for a in inputs]
         batch = arrs[0].shape[0]
         if batch == 0:
-            outs = tuple(np.empty((0,) + tuple(self.graph.tensor(t).shape),
-                                  np.dtype(self.graph.tensor(t).dtype))
-                         for t in self.graph.outputs)
-            return outs if len(outs) > 1 else outs[0]
+            return self._empty_rows()
         interp = self._reference_interp()
         rows = []
         with self._ref_lock:

@@ -37,7 +37,28 @@ from . import qconv as _qc
 LANE = MXU_LANES
 
 
+#: Tri-state override for interpret mode: None = auto (backend-derived),
+#: True/False = forced. The tuned bench lane (``benchmarks/run.py
+#: --no-interpret``) forces False after :func:`can_lower_noninterpret`
+#: proves the backend lowers Pallas natively.
+_INTERPRET_OVERRIDE = None
+
+#: Cached (supported, reason) result of the non-interpret lowering probe.
+_NONINTERPRET_PROBE = None
+
+
+def set_interpret(mode) -> None:
+    """Force (``True``/``False``) or restore automatic (``None``)
+    interpret-mode selection for every Pallas kernel call. Forcing
+    ``False`` on a backend that cannot lower Mosaic/Triton makes kernel
+    calls raise — gate it behind :func:`can_lower_noninterpret`."""
+    global _INTERPRET_OVERRIDE
+    _INTERPRET_OVERRIDE = mode
+
+
 def _interpret() -> bool:
+    if _INTERPRET_OVERRIDE is not None:
+        return _INTERPRET_OVERRIDE
     return jax.default_backend() != "tpu"
 
 
@@ -47,6 +68,34 @@ def interpret_mode() -> bool:
     record this per measurement so committed pallas numbers are
     interpretable across backends."""
     return _interpret()
+
+
+def can_lower_noninterpret():
+    """Probe (once, cached) whether this backend can lower and run a
+    Pallas kernel with ``interpret=False`` — i.e. a real Mosaic/Triton
+    compile, not the interpreter. Returns ``(supported, reason)``:
+    ``(True, None)`` on success, else ``(False, "<error summary>")`` so
+    the bench lane can degrade gracefully with an explicit skip reason
+    instead of crashing the run."""
+    global _NONINTERPRET_PROBE
+    if _NONINTERPRET_PROBE is not None:
+        return _NONINTERPRET_PROBE
+    try:
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + 1
+
+        fn = pl.pallas_call(
+            kern, out_shape=jax.ShapeDtypeStruct((8, LANE), jnp.float32),
+            interpret=False)
+        out = jax.jit(fn)(jnp.zeros((8, LANE), jnp.float32))
+        jax.block_until_ready(out)
+        _NONINTERPRET_PROBE = (True, None)
+    except Exception as e:  # NotImplementedError / Mosaic unavailable / ...
+        msg = f"{type(e).__name__}: {e}"
+        _NONINTERPRET_PROBE = (False, " ".join(msg.split())[:200])
+    return _NONINTERPRET_PROBE
 
 
 def _pad2(a, m0, m1, value=0):

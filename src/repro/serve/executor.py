@@ -43,8 +43,28 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import os
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Optional
+
+#: Environment override for :class:`ThreadPoolExecutorBackend`'s default
+#: worker count — bench records carry the effective value so overhead
+#: numbers stay comparable across machines.
+WORKERS_ENV = "REPRO_EXECUTOR_WORKERS"
+
+
+def default_workers() -> int:
+    """Worker count a ``ThreadPoolExecutorBackend()`` gets when built
+    without an explicit ``max_workers``: ``$REPRO_EXECUTOR_WORKERS`` when
+    set to a positive integer, else 2 (one flush on device + one staging).
+    Malformed values fall back to the default rather than failing serving
+    startup."""
+    raw = os.environ.get(WORKERS_ENV, "")
+    try:
+        n = int(raw)
+    except ValueError:
+        return 2
+    return n if n >= 1 else 2
 
 
 @dataclasses.dataclass
@@ -140,9 +160,17 @@ class InferenceExecutor:
     resilience-aware backends; plain backends ignore it. ``run`` returns
     either the stacked ``(rows, ...)`` output array or a
     :class:`RowOutcomes` with per-row results/errors.
+
+    ``detached`` advertises the batch-granular dispatch capability
+    (:meth:`submit_flush`): the backend delivers a finished flush to the
+    scheduler as ONE event-loop callback instead of an awaited ``run``.
+    Wrapper backends (resilience, fault injection) keep the default
+    ``False`` — their per-attempt semantics live inside ``run`` — so the
+    scheduler routes them through the legacy task path unchanged.
     """
 
     inline = True
+    detached = False
 
     @property
     def closed(self) -> bool:
@@ -154,6 +182,20 @@ class InferenceExecutor:
 
     async def run(self, infer: Callable, xs, ctx: Optional[DispatchCtx] = None):
         raise NotImplementedError
+
+    def submit_flush(self, infer: Callable, xs,
+                     ctx: Optional[DispatchCtx],
+                     done: Callable) -> None:
+        """Batch-granular dispatch (only when ``detached`` is ``True``):
+        start ``infer(xs)`` and later invoke ``done(result, error)``
+        exactly once as a single event-loop callback. The scheduler
+        resolves every row future of the flush inside that one callback —
+        one loop wakeup per *flush* instead of an executor-future wakeup
+        plus a task hop per flush and a callback per request. Must be
+        called from the event-loop thread; raises if the backend does not
+        support detached dispatch or is closed."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support detached dispatch")
 
     def close(self) -> None:
         pass
@@ -196,9 +238,12 @@ class ThreadPoolExecutorBackend(InferenceExecutor):
     """
 
     inline = False
+    detached = True
 
-    def __init__(self, max_workers: int = 2,
+    def __init__(self, max_workers: Optional[int] = None,
                  thread_name_prefix: str = "repro-serve"):
+        if max_workers is None:
+            max_workers = default_workers()
         assert max_workers >= 1
         self._max_workers = max_workers
         self._prefix = thread_name_prefix
@@ -213,20 +258,50 @@ class ThreadPoolExecutorBackend(InferenceExecutor):
     def closed(self) -> bool:
         return self._closed
 
-    async def run(self, infer: Callable, xs,
-                  ctx: Optional[DispatchCtx] = None):
+    def _ensure_pool(self) -> ThreadPoolExecutor:
         if self._closed:
             raise RuntimeError("executor is closed")
         if self._pool is None:
             self._pool = ThreadPoolExecutor(
                 max_workers=self._max_workers,
                 thread_name_prefix=self._prefix)
+        return self._pool
+
+    async def run(self, infer: Callable, xs,
+                  ctx: Optional[DispatchCtx] = None):
+        pool = self._ensure_pool()
         loop = asyncio.get_running_loop()
         if ctx is not None and ctx.trace is not None:
             # run_in_executor does not carry the trace scope to the worker
             # thread; re-enter it there so engine spans reach this flush
             infer = ctx.trace.bind(infer)
-        return await loop.run_in_executor(self._pool, infer, xs)
+        return await loop.run_in_executor(pool, infer, xs)
+
+    def submit_flush(self, infer: Callable, xs,
+                     ctx: Optional[DispatchCtx],
+                     done: Callable) -> None:
+        """Batch-granular dispatch: the worker thread runs ``infer(xs)``
+        and hands the finished flush back as ONE
+        ``loop.call_soon_threadsafe(done, result, error)``. Compared to
+        ``run`` this removes, per flush: the ``run_in_executor`` future,
+        its done-callback wakeup, and the awaiting flight task — the
+        scheduler's ``done`` retires the batch and resolves all row
+        futures inside the single callback. Exceptions from ``infer``
+        travel in the ``error`` slot; ``done`` is invoked exactly once."""
+        pool = self._ensure_pool()
+        loop = asyncio.get_running_loop()
+        if ctx is not None and ctx.trace is not None:
+            infer = ctx.trace.bind(infer)
+
+        def work():
+            res, err = None, None
+            try:
+                res = infer(xs)
+            except Exception as e:
+                err = e
+            loop.call_soon_threadsafe(done, res, err)
+
+        pool.submit(work)
 
     def recycle(self) -> None:
         """Tear down the current pool abruptly (no wait) and let the next

@@ -54,16 +54,27 @@ class ServingRegistry:
     """Named compiled models, each behind a dynamic micro-batcher.
 
     ``executor`` (optional) is shared by every registered model's batcher
-    and closed by :meth:`stop`; ``classes`` (optional ``{name:
+    and closed by :meth:`stop`; ``executor_workers`` (optional) builds a
+    shared ``ThreadPoolExecutorBackend`` of that width when no explicit
+    ``executor`` is given (the ``REPRO_EXECUTOR_WORKERS`` env var sets the
+    default width when neither is passed); ``classes`` (optional ``{name:
     ClassPolicy}``) is the default priority-class table each batcher
-    starts from — both can be overridden per model in :meth:`register`.
+    starts from — executor and classes can be overridden per model in
+    :meth:`register`.
     """
 
     def __init__(self, *, clock: Optional[Clock] = None, max_batch: int = 32,
                  max_delay_s: float = 0.002, max_queue: int = 256,
                  executor: Optional[InferenceExecutor] = None,
+                 executor_workers: Optional[int] = None,
                  classes: Optional[dict] = None, tracer=None):
         self.clock = clock or Clock()
+        if executor is None and executor_workers is not None:
+            # convenience: size the shared off-loop pool without importing
+            # the backend (the env default REPRO_EXECUTOR_WORKERS applies
+            # when neither is given and an explicit backend is built)
+            from .executor import ThreadPoolExecutorBackend
+            executor = ThreadPoolExecutorBackend(max_workers=executor_workers)
         self.executor = executor
         # one repro.obs.Tracer shared by every batcher (None = tracing off)
         self.tracer = tracer

@@ -31,12 +31,17 @@ CHAOS_OK = {"serve/sine_chaos_slo": {
     "median_us": 2.0,
     "slo_attainment": {"interactive": 0.97, "batch": 0.91},
     "stage_breakdown": BD_OK}}
+DISPATCH_OK = {
+    "serve/sine_dispatch_overhead_us": {
+        "median_us": 5.0, "stage_breakdown": BD_OK},
+    "serve/sine_dispatch_overhead_vs_legacy": {
+        "median_us": None, "ratio": 2.5, "stage_breakdown": BD_OK}}
 
 
 def test_check_bench_gates_names_and_ratios(tmp_path):
     speedup = {"runtime/x_speedup": {"ratio": 2.0, "median_us": None}}
     # all names present, speedup >= 1.0, non-speedup ratios ignored
-    ok = {**speedup, **CHAOS_OK, **TRACE_OK,
+    ok = {**speedup, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
           "serve/a_vs_b": {"ratio": 1.0, "median_us": None,
                            "stage_breakdown": BD_OK},
           "serve/x_offloop_vs_inline": {"ratio": 1.1, "median_us": None,
@@ -63,7 +68,7 @@ def test_check_bench_gates_offloop_presence_and_slo(tmp_path):
                                  "stage_breakdown": BD_OK}}) == 1
     # ...with it (ratio >= 1.0) the run passes; runtime-only runs are exempt
     assert _run_check_bench(tmp_path, base, {
-        **base, **CHAOS_OK, **TRACE_OK,
+        **base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
         "serve/sine_serial_us": {"median_us": 5.0,
                                  "stage_breakdown": BD_OK},
         **offloop}) == 0
@@ -71,12 +76,12 @@ def test_check_bench_gates_offloop_presence_and_slo(tmp_path):
     # a *_slo record must carry per-class attainment: absent, empty, or
     # non-numeric attainment fails; a complete dict passes
     for bad_att in (None, {}, {"interactive": None}):
-        doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK,
+        doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
                "serve/sine_mixed_slo": {"median_us": 3.0,
                                         "slo_attainment": bad_att,
                                         "stage_breakdown": BD_OK}}
         assert _run_check_bench(tmp_path, base, doc) == 1
-    doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK,
+    doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
            "serve/sine_mixed_slo": {
                "median_us": 3.0,
                "slo_attainment": {"interactive": 0.97, "batch": 0.74},
@@ -95,7 +100,7 @@ def test_check_bench_gates_chaos_floor(tmp_path):
     """Gate 6: serve/ runs must carry the fault-injection record, and its
     interactive goodput must stay >= 0.9."""
     base = {"runtime/x_us": {"median_us": 1.0}}
-    serve = {**base, **TRACE_OK,
+    serve = {**base, **TRACE_OK, **DISPATCH_OK,
              "serve/sine_serial_us": {"median_us": 5.0,
                                       "stage_breakdown": BD_OK},
              "serve/sine_offloop_vs_inline": {"ratio": 1.2,
@@ -121,7 +126,7 @@ def test_check_bench_gates_stage_breakdown_and_trace(tmp_path):
     tracing A/B record must exist, and its p95 envelope ratio must stay
     <= 1.03."""
     base = {"runtime/x_us": {"median_us": 1.0}}
-    serve = {**base, **CHAOS_OK, **TRACE_OK,
+    serve = {**base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
              "serve/sine_offloop_vs_inline": {"ratio": 1.2,
                                               "median_us": None,
                                               "stage_breakdown": BD_OK}}
@@ -150,6 +155,46 @@ def test_check_bench_gates_stage_breakdown_and_trace(tmp_path):
         assert _run_check_bench(tmp_path, base, doc) == 1
 
 
+def test_check_bench_gates_dispatch_and_zero_median(tmp_path):
+    """Gates 8+9: serve/ runs must carry the dispatch-overhead record,
+    its fresh median and queue_wait_us must stay within 3x of the
+    committed baseline, and no record may write a placeholder 0.0
+    median."""
+    base = {"runtime/x_us": {"median_us": 1.0}}
+    serve = {**base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
+             "serve/sine_offloop_vs_inline": {"ratio": 1.2,
+                                              "median_us": None,
+                                              "stage_breakdown": BD_OK}}
+    assert _run_check_bench(tmp_path, base, serve) == 0
+    # dropping the dispatch microbench record entirely fails (presence
+    # gate, same contract as offloop/chaos/trace); runtime-only exempt
+    gone = {k: v for k, v in serve.items()
+            if "dispatch_overhead" not in k}
+    assert _run_check_bench(tmp_path, base, gone) == 1
+    assert _run_check_bench(tmp_path, base, base) == 0
+    # first landing (baseline lacks the record): only a numeric median is
+    # required — the 3x comparison arms once the baseline carries it
+    assert _run_check_bench(tmp_path, base, serve) == 0
+    # fresh median blowing past 3x the baseline's fails; same for the
+    # stage_breakdown's queue_wait_us
+    slow = {**serve, "serve/sine_dispatch_overhead_us": {
+        "median_us": 5.0 * 3.5, "stage_breakdown": BD_OK}}
+    assert _run_check_bench(tmp_path, serve, slow) == 1
+    queued = {**serve, "serve/sine_dispatch_overhead_us": {
+        "median_us": 5.0,
+        "stage_breakdown": {**BD_OK,
+                            "queue_wait_us": BD_OK["queue_wait_us"] * 4}}}
+    assert _run_check_bench(tmp_path, serve, queued) == 1
+    # within the noise cap passes
+    near = {**serve, "serve/sine_dispatch_overhead_us": {
+        "median_us": 5.0 * 2.0, "stage_breakdown": BD_OK}}
+    assert _run_check_bench(tmp_path, serve, near) == 0
+    # a 0.0 median is a schema violation anywhere — non-timing records
+    # carry null, and no real measurement is exactly 0.0 µs
+    zeroed = {**serve, "runtime/placeholder_us": {"median_us": 0.0}}
+    assert _run_check_bench(tmp_path, base, zeroed) == 1
+
+
 @pytest.mark.slow
 def test_bench_runtime_fast_smoke(tmp_path, monkeypatch, capsys):
     monkeypatch.chdir(tmp_path)
@@ -169,11 +214,19 @@ def test_bench_runtime_fast_smoke(tmp_path, monkeypatch, capsys):
     # non-pallas records carry layout_plan=None
     assert doc["runtime/person_compiled_pallas_us"]["layout_plan"] is True
     assert doc["runtime/person_compiled_us"]["layout_plan"] is None
+    # the tuned non-interpret lane: either a real interpret=False timing
+    # or an explicit skip record naming why the backend can't lower it
+    ni = doc["runtime/sine_pallas_noninterpret_us"]
+    assert ni["pallas_interpret"] is False or \
+        ni["derived"].startswith("skipped:")
     for name, rec in doc.items():
         assert name.startswith("runtime/")
-        # every record is a timing, a ratio, or both — never neither
+        # every record is a timing, a ratio, or an explicit skip marker —
+        # never a placeholder zero
         assert isinstance(rec["median_us"], float) or \
-            isinstance(rec["ratio"], float)
+            isinstance(rec["ratio"], float) or \
+            rec["derived"].startswith("skipped:")
+        assert rec["median_us"] != 0.0  # null, never a placeholder zero
         assert rec["backend"]  # interpret-mode CPU numbers must say "cpu"
         # whether Pallas ran in interpret mode (CPU fallback) is recorded
         # per measurement, so pallas numbers are comparable across backends
@@ -204,6 +257,7 @@ def test_bench_serve_fast_smoke(tmp_path, monkeypatch, capsys):
         "serve/sine_dynamic_per_req_us", "serve/sine_dynamic_vs_serial",
         "serve/sine_poisson_x1_p95_us", "serve/sine_poisson_x2_p95_us",
         "serve/sine_poisson_x4_p95_us",
+        "serve/sine_poisson_noninterpret_p95_us",
         "serve/sine_offloop_p95_us", "serve/sine_offloop_vs_inline",
         "serve/sine_mixed_slo",
         "serve/sine_chaos_slo", "serve/sine_chaos_resilient_vs_raw",
@@ -222,6 +276,11 @@ def test_bench_serve_fast_smoke(tmp_path, monkeypatch, capsys):
                                "retry_us"}, name
             assert all(isinstance(v, float) for v in bd.values()), name
     assert doc["serve/sine_trace_overhead"]["ratio"] > 0
+    # the tuned non-interpret serving lane: a real interpret=False timing
+    # or an explicit skip record naming why the backend can't lower it
+    ni = doc["serve/sine_poisson_noninterpret_p95_us"]
+    assert ni["pallas_interpret"] is False or \
+        ni["derived"].startswith("skipped:")
     # the executor A/B and SLO records satisfy the new check_bench gates:
     # the mixed-priority record reports attainment for BOTH classes
     att = doc["serve/sine_mixed_slo"]["slo_attainment"]

@@ -18,7 +18,10 @@
 #      OpenMetrics exposition, all before the bench relies on
 #      stage_breakdown capture
 #   5. tier-1 test suite (ROADMAP.md contract)
-#   6. fast benchmark run -> fresh BENCH json
+#   6. fast benchmark run -> fresh BENCH json (includes the dispatch
+#      hot-path microbench, which also writes its full lane/attempt
+#      profile to results/dispatch_profile.json — uploaded as a CI
+#      artifact so a dispatch-gate trip is diagnosable from the run)
 #   7. bench regression check against the committed baseline:
 #      record names must all still be produced, every speedup ratio
 #      (*_speedup / *_vs_* records, incl. serve/*_offloop_vs_inline and
@@ -28,10 +31,14 @@
 #      within 10%, the serve/*_chaos_slo record must keep interactive
 #      goodput >= 0.9 under the injected-fault storm, every serve/*
 #      record must carry its stage_breakdown, and the
-#      serve/*_trace_overhead envelope must stay <= 1.03 — a layout,
-#      batching, executor-pipelining, priority-scheduling, arena-model,
-#      resilience, or observability regression fails the Actions gate
-#      here
+#      serve/*_trace_overhead envelope must stay <= 1.03, the
+#      serve/*_dispatch_overhead_us record must exist with median and
+#      queue_wait_us within 3x of the committed baseline (its
+#      *_vs_legacy envelope >= 1.0 rides the generic ratio gate), and
+#      no record may carry a placeholder median_us of exactly 0.0 — a
+#      layout, batching, executor-pipelining, priority-scheduling,
+#      arena-model, resilience, observability, or dispatch-overhead
+#      regression fails the Actions gate here
 #
 #   tools/check.sh [--skip-tests]
 set -euo pipefail

@@ -1,4 +1,4 @@
-"""Bench regression gate, four checks per run:
+"""Bench regression gate:
 
 1. **Name regression** — every record name in the committed
    BENCH_runtime.json baseline must still be produced by a fresh run.
@@ -63,6 +63,25 @@
    with ``serve/`` records but no ``*_trace_overhead`` record fails the
    same way a missing executor A/B does.
 
+8. **Dispatch-overhead ceiling** — a fresh run with ``serve/`` records
+   must include a ``*_dispatch_overhead_us`` record (the hot-path
+   microbench going missing is a name regression even before it lands in
+   a baseline), and when the committed baseline carries the same record
+   the fresh median and the fresh ``stage_breakdown``'s ``queue_wait_us``
+   must each stay within ``DISPATCH_CAP``x of the baseline values. The
+   companion ``*_dispatch_overhead_vs_legacy`` envelope (held >= 1.0 by
+   check 2) catches the optimized path regressing relative to the legacy
+   lane; this check catches both lanes drifting slower together — a cap
+   loose enough for shared-runner noise, tight enough that a return to
+   pre-teardown per-request cost trips it.
+
+9. **Null-median schema** — no record may carry ``median_us == 0.0``:
+   non-timing records (ratios, skip markers) carry ``median_us: null``,
+   and a real measurement of exactly 0.0 µs is impossible. A 0.0 median
+   means a bench started writing placeholder zeros into the trajectory,
+   which would silently poison any cross-PR comparison that averages or
+   gates on medians.
+
   python tools/check_bench.py BASELINE.json FRESH.json
 """
 from __future__ import annotations
@@ -81,6 +100,8 @@ CHAOS_FLOOR = 0.9  # interactive goodput under the injected-fault storm
 TRACE_MARKER = "_trace_overhead"
 TRACE_CEIL = 1.03  # traced/untraced p95 envelope: tracing costs <= 3%
 STAGE_KEYS = ("queue_wait_us", "pad_us", "device_us", "retry_us")
+DISPATCH_MARKER = "_dispatch_overhead_us"
+DISPATCH_CAP = 3.0  # fresh median / queue_wait vs baseline: noise cap
 
 
 def _is_slo_record(name: str) -> bool:
@@ -216,6 +237,53 @@ def trace_violations(doc: dict) -> list:
     return bad
 
 
+def missing_dispatch(doc: dict) -> bool:
+    """True when serve/ records exist but the dispatch-overhead
+    microbench record is gone."""
+    names = set(doc)
+    return any(n.startswith("serve/") for n in names) and \
+        not any(DISPATCH_MARKER in n for n in names)
+
+
+def dispatch_violations(baseline: dict, fresh: dict) -> list:
+    """(name, what, fresh_value, cap) for ``*_dispatch_overhead_us``
+    records whose fresh median or stage_breakdown queue_wait_us exceeds
+    DISPATCH_CAP x the committed baseline's value. Records absent from
+    the baseline (first landing) only need a numeric median; the
+    comparison arms once the baseline carries them."""
+    bad = []
+    for name, rec in sorted(fresh.items()):
+        if DISPATCH_MARKER not in name or not isinstance(rec, dict):
+            continue
+        med = rec.get("median_us")
+        if not isinstance(med, numbers.Real):
+            bad.append((name, "median_us", med, None))
+            continue
+        base = baseline.get(name)
+        if not isinstance(base, dict):
+            continue
+        bmed = base.get("median_us")
+        if isinstance(bmed, numbers.Real) and bmed > 0 \
+                and med > DISPATCH_CAP * bmed:
+            bad.append((name, "median_us", med, DISPATCH_CAP * bmed))
+        bd = rec.get("stage_breakdown") or {}
+        bbd = base.get("stage_breakdown") or {}
+        q, bq = bd.get("queue_wait_us"), bbd.get("queue_wait_us")
+        if isinstance(q, numbers.Real) and isinstance(bq, numbers.Real) \
+                and bq > 0 and q > DISPATCH_CAP * bq:
+            bad.append((name, "queue_wait_us", q, DISPATCH_CAP * bq))
+    return bad
+
+
+def zero_median_violations(doc: dict) -> list:
+    """Names of records carrying ``median_us == 0.0`` — the schema
+    requires ``null`` for non-timing records, and no real measurement is
+    exactly 0.0 µs; a literal zero is a placeholder poisoning the
+    trajectory."""
+    return sorted(name for name, rec in doc.items()
+                  if isinstance(rec, dict) and rec.get("median_us") == 0.0)
+
+
 def main(baseline_path: str, fresh_path: str) -> int:
     with open(baseline_path) as f:
         baseline_doc = json.load(f)
@@ -297,6 +365,29 @@ def main(baseline_path: str, fresh_path: str) -> int:
         for name, ratio in bad_trace:
             print(f"  - {name} = {ratio!r}", file=sys.stderr)
         rc = 1
+    if missing_dispatch(fresh_doc):
+        print("check_bench: FAIL — serve/ records present but no "
+              f"*{DISPATCH_MARKER} record: the dispatch-overhead "
+              "microbench went missing", file=sys.stderr)
+        rc = 1
+    bad_dispatch = dispatch_violations(baseline_doc, fresh_doc)
+    if bad_dispatch:
+        print(f"check_bench: FAIL — {len(bad_dispatch)} dispatch-overhead "
+              f"value(s) missing or above {DISPATCH_CAP}x the committed "
+              f"baseline:", file=sys.stderr)
+        for name, what, val, cap in bad_dispatch:
+            lim = "n/a" if cap is None else f"{cap:.1f}"
+            print(f"  - {name} {what} = {val!r} (cap {lim})",
+                  file=sys.stderr)
+        rc = 1
+    zero_medians = zero_median_violations(fresh_doc)
+    if zero_medians:
+        print(f"check_bench: FAIL — {len(zero_medians)} record(s) with "
+              f"median_us == 0.0 (non-timing records must carry null):",
+              file=sys.stderr)
+        for name in zero_medians:
+            print(f"  - {name}", file=sys.stderr)
+        rc = 1
     narrowed = slo_narrowed(baseline_doc, fresh_doc)
     if narrowed:
         print(f"check_bench: FAIL — {len(narrowed)} *_slo record(s) dropped "
@@ -312,13 +403,16 @@ def main(baseline_path: str, fresh_path: str) -> int:
         n_chaos = sum(1 for n in fresh if CHAOS_MARKER in n)
         n_serve = sum(1 for n in fresh if n.startswith("serve/"))
         n_trace = sum(1 for n in fresh if TRACE_MARKER in n)
+        n_disp = sum(1 for n in fresh if DISPATCH_MARKER in n)
         print(f"check_bench: OK — all {len(baseline)} baseline names "
               f"present ({len(fresh)} total), {n_gated} speedup ratio(s) "
               f">= 1.0, {n_slo} SLO record(s) carrying per-class "
               f"attainment, {n_chaos} chaos record(s) above the "
               f"{CHAOS_FLOOR} {CHAOS_CLASS} goodput floor, {n_serve} "
               f"serve record(s) with stage breakdowns, {n_trace} "
-              f"trace-overhead ratio(s) <= {TRACE_CEIL}")
+              f"trace-overhead ratio(s) <= {TRACE_CEIL}, {n_disp} "
+              f"dispatch-overhead record(s) within {DISPATCH_CAP}x of "
+              f"baseline, no zero-median placeholders")
     return rc
 
 
