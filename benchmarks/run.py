@@ -33,6 +33,8 @@ def _record_family(name: str):
         return "memory"
     if name.startswith("serve/sine_dispatch"):
         return "dispatch"
+    if "_coldstart_" in name:
+        return "coldstart"
     if name.startswith("serve/"):
         return "serve"
     return None
@@ -67,7 +69,7 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_memory, bench_runtime,
                             bench_paging, bench_energy, bench_serve,
-                            bench_dispatch, common)
+                            bench_dispatch, bench_coldstart, common)
     benches = {
         "accuracy": bench_accuracy.main,   # Table 5
         "memory": bench_memory.main,       # Figs. 9/10
@@ -76,6 +78,7 @@ def main() -> None:
         "energy": bench_energy.main,       # Table 6 (derived)
         "serve": bench_serve.main,         # dynamic batching vs serial
         "dispatch": bench_dispatch.main,   # per-request dispatch overhead
+        "coldstart": bench_coldstart.main,  # AOT-cache boot, cold vs warm
     }
     del common.RECORDS[:]
     print("name,us_per_call,derived,backend")
@@ -90,7 +93,8 @@ def main() -> None:
         print(f"# bench {name} done in {time.time()-t0:.1f}s",
               file=sys.stderr)
 
-    refreshed = {f for f in ("runtime", "memory", "serve", "dispatch")
+    refreshed = {f for f in ("runtime", "memory", "serve", "dispatch",
+                             "coldstart")
                  if f in ran}
     if refreshed:
         # Merge into an existing file: a partial run (--only runtime/serve)

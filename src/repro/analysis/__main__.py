@@ -21,6 +21,7 @@ from repro.core import graph as G
 from repro.core.engine import ExecutionPlan, bucket_floor
 
 from .budget import audit_pads
+from .fingerprint import plan_fingerprint
 from .liveness import arena_liveness, measure_live_bytes, paged_peak_bytes
 from .report import (ERROR, AuditReport, Finding, RouteReport, errors,
                      to_json, to_markdown)
@@ -95,6 +96,11 @@ def audit_plan(name: str, plan: ExecutionPlan, max_batch: int = 4,
 
     rep.retrace, rep.retrace_findings = audit_retrace(
         plan, max_batch, compiled_model=compiled_model)
+    # content address of the audited plan: the persistent AOT cache
+    # cross-checks its manifest against this (fingerprint.verify_manifest,
+    # finding C005), so a cache and an audit produced from different plans
+    # can never silently co-certify a boot
+    rep.fingerprint = plan_fingerprint(plan)
     return rep
 
 

@@ -69,6 +69,9 @@ class AuditReport:
     routes: List[RouteReport] = dataclasses.field(default_factory=list)
     retrace: Dict[str, Any] = dataclasses.field(default_factory=dict)
     retrace_findings: List[Finding] = dataclasses.field(default_factory=list)
+    # plan content address (repro.analysis.fingerprint) — lets the AOT
+    # cache cross-check its manifest against this audit (finding C005)
+    fingerprint: Optional[str] = None
 
     @property
     def findings(self) -> List[Finding]:
@@ -85,6 +88,7 @@ class AuditReport:
         return {
             "model": self.model,
             "use_pallas": self.use_pallas,
+            "fingerprint": self.fingerprint,
             "ok": self.ok,
             "verifier": [f.as_dict() for f in self.verifier],
             "retrace": self.retrace,

@@ -42,10 +42,13 @@ def _num(v: Any) -> str:
 
 
 def openmetrics(models_snap: Dict[str, dict],
-                tracer: Any = None) -> str:
+                tracer: Any = None, engines: Optional[dict] = None,
+                cache: Optional[dict] = None) -> str:
     """Render ``{model: ModelMetrics.snapshot()}`` (e.g. from
-    ``ServingRegistry.snapshot()``) — plus the tracer's stage histograms
-    when one is passed — as OpenMetrics text."""
+    ``ServingRegistry.snapshot()``) — plus the tracer's stage histograms,
+    the per-engine compile/cache accounting (``engines``), and the
+    persistent AOT cache counters (``cache``) when passed — as
+    OpenMetrics text."""
     out = []
 
     def family(name: str, mtype: str, help_: str) -> None:
@@ -102,12 +105,34 @@ def openmetrics(models_snap: Dict[str, dict],
         family("compile_events", "counter",
                "AOT compiles observed inside traced flushes")
         out.append(f"repro_compile_events_total {tracer.compile_events}")
+    if engines:
+        family("engine_compiles", "counter",
+               "real XLA compiles per engine (zero after a warm "
+               "cache boot)")
+        for model, e in sorted(engines.items()):
+            out.append(f'repro_engine_compiles_total{{model='
+                       f'"{_esc(model)}"}} '
+                       f'{_num(e.get("compile_events", 0))}')
+        family("engine_cache_events", "counter",
+               "persistent AOT cache interactions per engine")
+        for model, e in sorted(engines.items()):
+            for kind in ("hit", "miss", "store"):
+                out.append(f'repro_engine_cache_events_total{{model='
+                           f'"{_esc(model)}",event="{kind}"}} '
+                           f'{_num(e.get("cache_events", {}).get(kind, 0))}')
+    if cache:
+        family("aot_cache", "counter",
+               "registry-level persistent executable cache counters")
+        for kind in ("hits", "misses", "stores"):
+            out.append(f'repro_aot_cache_total{{event="{kind}"}} '
+                       f'{_num(cache.get(kind, 0))}')
     out.append("# EOF")
     return "\n".join(out) + "\n"
 
 
 def json_snapshot(models_snap: Dict[str, dict], tracer: Any = None,
-                  flight: Any = None) -> Dict[str, Any]:
+                  flight: Any = None, engines: Optional[dict] = None,
+                  cache: Optional[dict] = None) -> Dict[str, Any]:
     """One structured dict unifying every telemetry source."""
     doc: Dict[str, Any] = {"models": models_snap}
     if tracer is not None and getattr(tracer, "enabled", False):
@@ -115,4 +140,8 @@ def json_snapshot(models_snap: Dict[str, dict], tracer: Any = None,
         doc["stage_breakdown_us"] = tracer.stage_means_us()
     if flight is not None:
         doc["flight"] = flight.status()
+    if engines is not None:
+        doc["engines"] = engines
+    if cache is not None:
+        doc["aot_cache"] = cache
     return doc

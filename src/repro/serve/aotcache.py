@@ -1,0 +1,314 @@
+"""Persistent, content-addressed AOT executable cache.
+
+MicroFlow's thesis is that everything decidable before the first inference
+is decided at compile time — but a process restart used to re-pay the one
+cost that discipline still left at boot: ``warmup_batched`` XLA-compiling
+every bucket executable and staged-pad stage from scratch. This module
+makes those executables *artifacts*: serialized via
+``jax.experimental.serialize_executable`` (the export path behind
+``jax.jit(...).lower().compile()``), stored under a directory keyed by the
+:func:`repro.analysis.plan_fingerprint` of the ``ExecutionPlan`` they were
+lowered from, and reloaded on the next boot after
+:func:`repro.analysis.verify_manifest` *proves* the cache covers every
+bucket and staged-pad key the serving path can reach.
+
+Layout on disk (one directory per plan fingerprint)::
+
+    <root>/<fingerprint>/
+        manifest.json        # fingerprint, environment, coverage, digests
+        bucket_<n>.jexe      # serialized bucket executable (pickle)
+        stage_<id>.jexe      # serialized staged-pad executable
+        percall.jexe         # serialized per-call executable (optional)
+
+Each ``.jexe`` file is ``pickle.dumps({"payload", "in_tree", "out_tree"})``
+— the three pieces ``serialize_executable.serialize`` returns — and the
+manifest records its sha256, so a truncated or tampered entry is rejected
+at verification time (finding ``C003``), never half-loaded.
+
+The flow a replica runs at boot (wired through
+``CompiledModel.warmup_batched(cache=...)`` and
+``ServingRegistry(cache_dir=...)``)::
+
+    load-or-compile:  verify manifest -> deserialize all -> install
+                      (any failure => cold compile => store)
+
+Loads are all-or-nothing: a cache that fails verification or
+deserialization contributes nothing and the model compiles fresh, so a
+corrupt cache can degrade boot *time*, never boot *correctness*. Cached
+executables are the same XLA programs a fresh compile produces, so
+outputs are bit-identical (pinned by ``tests/test_aotcache.py``).
+
+Backends whose compilations do not support serialization (probed by
+:func:`serialization_support`) degrade to plain cold compiles; the
+cold-start bench then emits explicit skip records instead of timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pickle
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["AotCache", "CacheResult", "serialization_support"]
+
+_probe_lock = threading.Lock()
+_probe_result: Optional[Tuple[bool, str]] = None
+
+
+def serialization_support() -> Tuple[bool, str]:
+    """Whether this backend's compiled executables can be serialized —
+    probed once per process by round-tripping a trivial executable.
+    Returns ``(ok, reason)``; the reason lands verbatim in the cold-start
+    bench's skip records when unsupported."""
+    global _probe_result
+    with _probe_lock:
+        if _probe_result is not None:
+            return _probe_result
+        try:
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental import serialize_executable as se
+            exe = jax.jit(lambda a: a + 1).lower(
+                jax.ShapeDtypeStruct((1,), jnp.int32.dtype)).compile()
+            payload, in_tree, out_tree = se.serialize(exe)
+            se.deserialize_and_load(payload, in_tree, out_tree)
+            _probe_result = (True, "")
+        except Exception as e:  # pragma: no cover - backend-specific
+            _probe_result = (False, f"{type(e).__name__}: {e}")
+        return _probe_result
+
+
+@dataclasses.dataclass
+class CacheResult:
+    """Outcome of one cache interaction — what the boot path logs and the
+    registry surfaces in telemetry."""
+
+    hit: bool
+    fingerprint: str
+    reason: str = ""
+    loaded: int = 0       # executables deserialized into the model
+    stored: int = 0       # executables serialized to disk
+    findings: List[Any] = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {"hit": self.hit, "fingerprint": self.fingerprint,
+                "reason": self.reason, "loaded": self.loaded,
+                "stored": self.stored,
+                "findings": [str(f) for f in self.findings]}
+
+
+def _serialize_exe(exe: Any) -> bytes:
+    from jax.experimental import serialize_executable as se
+    payload, in_tree, out_tree = se.serialize(exe)
+    return pickle.dumps({"payload": payload, "in_tree": in_tree,
+                         "out_tree": out_tree})
+
+
+def _deserialize_exe(data: bytes) -> Any:
+    from jax.experimental import serialize_executable as se
+    doc = pickle.loads(data)
+    return se.deserialize_and_load(doc["payload"], doc["in_tree"],
+                                   doc["out_tree"])
+
+
+class AotCache:
+    """Persistent executable cache rooted at ``root`` (created lazily).
+
+    Thread-safe for the boot pattern (one load/store per model); store
+    is crash-consistent — entry files land first, the manifest last via
+    an atomic rename, so a killed store never produces a loadable-looking
+    half cache.
+    """
+
+    def __init__(self, root: str, *, audit_path: Optional[str] = None):
+        self.root = str(root)
+        # optional results/audit.json cross-check: when the file exists,
+        # verify_manifest additionally proves the manifest covers the
+        # audit's reachable bucket sets (finding C005)
+        self.audit_path = audit_path
+        self._lock = threading.Lock()
+        # monotone interaction counters (registry telemetry reads these)
+        self.hits = 0
+        self.misses = 0
+        self.stores = 0
+
+    # -- paths -------------------------------------------------------------
+    def dir_for(self, fingerprint: str) -> str:
+        return os.path.join(self.root, fingerprint)
+
+    def manifest_path(self, fingerprint: str) -> str:
+        return os.path.join(self.dir_for(fingerprint), "manifest.json")
+
+    def manifest(self, fingerprint: str) -> Optional[dict]:
+        try:
+            with open(self.manifest_path(fingerprint)) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def _audit_doc(self) -> Optional[dict]:
+        if self.audit_path is None or not os.path.exists(self.audit_path):
+            return None
+        try:
+            with open(self.audit_path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    # -- verification ------------------------------------------------------
+    def verify(self, model: Any, warm_batch: int,
+               read_entries: bool = True) -> CacheResult:
+        """Warm-boot admission: manifest + digest verification WITHOUT
+        loading anything into the model. ``hit`` means a subsequent
+        :meth:`load` would succeed (barring deserialization errors)."""
+        from repro.analysis.fingerprint import (plan_fingerprint,
+                                                verify_manifest)
+        plan = model.exec_plan
+        fp = plan_fingerprint(plan)
+        man = self.manifest(fp)
+        if man is None:
+            return CacheResult(False, fp, reason="no manifest")
+        entry_bytes = None
+        if read_entries:
+            entry_bytes = self._read_entries(fp, man)
+        info, findings = verify_manifest(man, plan, warm_batch,
+                                         entry_bytes=entry_bytes,
+                                         audit=self._audit_doc())
+        if not info["ok"]:
+            return CacheResult(False, fp, reason="manifest rejected",
+                               findings=findings)
+        return CacheResult(True, fp)
+
+    def _read_entries(self, fp: str, man: dict) -> Dict[str, bytes]:
+        out: Dict[str, bytes] = {}
+        d = self.dir_for(fp)
+        for name in man.get("entries", {}):
+            try:
+                with open(os.path.join(d, f"{name}.jexe"), "rb") as f:
+                    out[name] = f.read()
+            except OSError:
+                pass  # verify_manifest reports the gap as C003
+        return out
+
+    # -- load --------------------------------------------------------------
+    def load(self, model: Any, warm_batch: int) -> CacheResult:
+        """Verify-then-load: deserialize every bucket executable, staged
+        pad, and (when stored) the per-call executable into ``model``'s
+        AOT caches. All-or-nothing — any verification or deserialization
+        failure returns a miss and installs nothing, so the caller's cold
+        path still starts from a clean model."""
+        from repro.analysis.fingerprint import (plan_fingerprint,
+                                                stage_key_from_json,
+                                                verify_manifest)
+        plan = model.exec_plan
+        fp = plan_fingerprint(plan)
+        man = self.manifest(fp)
+        if man is None:
+            with self._lock:
+                self.misses += 1
+            return CacheResult(False, fp, reason="no manifest")
+        entry_bytes = self._read_entries(fp, man)
+        info, findings = verify_manifest(man, plan, warm_batch,
+                                         entry_bytes=entry_bytes,
+                                         audit=self._audit_doc())
+        if not info["ok"]:
+            with self._lock:
+                self.misses += 1
+            return CacheResult(False, fp, reason="manifest rejected",
+                               findings=findings)
+        try:
+            buckets = {}
+            for b in man["buckets"]:
+                buckets[int(b)] = _deserialize_exe(
+                    entry_bytes[f"bucket_{int(b)}"])
+            stages = {}
+            for key_id, key_json in man.get("stage_keys", {}).items():
+                stages[stage_key_from_json(key_json)] = _deserialize_exe(
+                    entry_bytes[f"stage_{key_id}"])
+            percall = None
+            if "percall" in man.get("entries", {}) and \
+                    "percall" in entry_bytes:
+                percall = _deserialize_exe(entry_bytes["percall"])
+        except Exception as e:
+            with self._lock:
+                self.misses += 1
+            return CacheResult(False, fp,
+                               reason=f"deserialization failed: "
+                                      f"{type(e).__name__}: {e}")
+        n = model.install_cached_executables(buckets, stages,
+                                             percall=percall)
+        with self._lock:
+            self.hits += 1
+        return CacheResult(True, fp, loaded=n)
+
+    # -- store -------------------------------------------------------------
+    def store(self, model: Any, warm_batch: int) -> CacheResult:
+        """Serialize ``model``'s warmed executables (buckets + staged pads
+        + per-call when compiled) under the plan fingerprint. The model
+        must already be warmed to ``warm_batch`` — a partial store would
+        just be rejected at load time, so this raises instead."""
+        from repro.analysis.fingerprint import (build_manifest,
+                                                plan_fingerprint,
+                                                stage_key_id)
+        from repro.analysis.retrace import warmed_buckets
+        ok, reason = serialization_support()
+        fp = plan_fingerprint(model.exec_plan)
+        if not ok:
+            return CacheResult(False, fp,
+                               reason=f"backend cannot serialize "
+                                      f"executables ({reason})")
+        need = set(warmed_buckets(warm_batch))
+        have = set(model.bucket_sizes())
+        if not need <= have:
+            raise ValueError(
+                f"model not warmed to {warm_batch}: buckets {sorted(have)} "
+                f"do not cover {sorted(need)} — call warmup_batched first")
+        d = self.dir_for(fp)
+        os.makedirs(d, exist_ok=True)
+        blobs: Dict[str, bytes] = {}
+        for b in sorted(need):
+            blobs[f"bucket_{b}"] = _serialize_exe(model.cached_bucket(b))
+        for key, exe in model.cached_stage_pads().items():
+            blobs[f"stage_{stage_key_id(key)}"] = _serialize_exe(exe)
+        percall = model.cached_percall()
+        if percall is not None:
+            blobs["percall"] = _serialize_exe(percall)
+        entries = {}
+        for name, data in blobs.items():
+            self._write_atomic(os.path.join(d, f"{name}.jexe"), data)
+            entries[name] = hashlib.sha256(data).hexdigest()
+        manifest = build_manifest(
+            model.exec_plan, warm_batch, entries,
+            extra={"model": model.graph.name,
+                   "use_pallas": bool(model.use_pallas)})
+        self._write_atomic(self.manifest_path(fp),
+                           (json.dumps(manifest, indent=1, sort_keys=True)
+                            + "\n").encode())
+        with self._lock:
+            self.stores += 1
+        return CacheResult(False, fp, reason="stored", stored=len(blobs))
+
+    @staticmethod
+    def _write_atomic(path: str, data: bytes) -> None:
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- telemetry ---------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            return {"root": self.root, "hits": self.hits,
+                    "misses": self.misses, "stores": self.stores}

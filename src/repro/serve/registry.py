@@ -67,7 +67,9 @@ class ServingRegistry:
                  max_delay_s: float = 0.002, max_queue: int = 256,
                  executor: Optional[InferenceExecutor] = None,
                  executor_workers: Optional[int] = None,
-                 classes: Optional[dict] = None, tracer=None):
+                 classes: Optional[dict] = None, tracer=None,
+                 cache=None, cache_dir: Optional[str] = None,
+                 audit_path: Optional[str] = None):
         self.clock = clock or Clock()
         if executor is None and executor_workers is not None:
             # convenience: size the shared off-loop pool without importing
@@ -78,9 +80,15 @@ class ServingRegistry:
         self.executor = executor
         # one repro.obs.Tracer shared by every batcher (None = tracing off)
         self.tracer = tracer
+        if cache is None and cache_dir is not None:
+            # convenience mirror of executor_workers: a directory is
+            # enough to opt the whole registry into persistent AOT boots
+            from .aotcache import AotCache
+            cache = AotCache(cache_dir, audit_path=audit_path)
+        self.cache = cache
         self._defaults = dict(max_batch=max_batch, max_delay_s=max_delay_s,
                               max_queue=max_queue, classes=classes,
-                              tracer=tracer)
+                              tracer=tracer, cache=cache)
         self._entries: dict = {}
         self._started = False
         self._stopped = False
@@ -213,20 +221,53 @@ class ServingRegistry:
         return {e.name: e.batcher.metrics.snapshot(now)
                 for e in self._entries.values()}
 
+    def engines(self) -> dict:
+        """Per-model compile/cache accounting straight off the engines:
+        ``compile_events`` (real XLA compiles — zero after a warm cache
+        boot), the typed ``compile_log`` tail, and the hit/miss/store
+        ``cache_events`` split. Duck-typed stand-ins without the counters
+        report empty."""
+        out = {}
+        for e in self._entries.values():
+            m = e.model
+            out[e.name] = {
+                "compile_events": getattr(m, "compile_events", 0),
+                "cache_events": dict(getattr(m, "cache_events", {}) or {}),
+                "compile_log": list(getattr(m, "compile_log", ()) or ())[-32:],
+            }
+        return out
+
+    def cache_status(self) -> Optional[dict]:
+        """The registry-level cache's counters plus each model's boot
+        outcome (``None`` when no cache is configured)."""
+        if self.cache is None:
+            return None
+        status = dict(self.cache.stats())
+        boots = {}
+        for e in self._entries.values():
+            res = getattr(e.model, "last_cache_result", None)
+            boots[e.name] = res.to_dict() if res is not None else None
+        status["boots"] = boots
+        return status
+
     def openmetrics(self) -> str:
         """OpenMetrics text exposition of every model's metrics (plus the
         per-stage latency histograms when a tracer is installed) — ready
         to serve from a scrape endpoint."""
         from repro.obs.export import openmetrics
-        return openmetrics(self.snapshot(), tracer=self.tracer)
+        return openmetrics(self.snapshot(), tracer=self.tracer,
+                           engines=self.engines(),
+                           cache=self.cache_status())
 
     def telemetry(self) -> dict:
         """Structured JSON snapshot unifying metrics, trace histograms,
-        and the flight recorder's status (``repro.obs.export``)."""
+        the flight recorder's status, and the engines' compile/cache
+        accounting (``repro.obs.export``)."""
         from repro.obs.export import json_snapshot
         flight = self.tracer.flight if self.tracer is not None else None
         return json_snapshot(self.snapshot(), tracer=self.tracer,
-                             flight=flight)
+                             flight=flight, engines=self.engines(),
+                             cache=self.cache_status())
 
 
 def build_paper_registry(names=("sine", "speech", "person"), *,

@@ -361,19 +361,27 @@ class MicroBatcher:
         self.pool_reused = 0   # admissions served from the pool
 
     @classmethod
-    def for_model(cls, model, *, warmup: bool = True, **kw) -> "MicroBatcher":
+    def for_model(cls, model, *, warmup: bool = True, cache=None,
+                  **kw) -> "MicroBatcher":
         """Batcher over ``CompiledModel.predict_q_many``. With ``warmup``
         every bucket a flush can dispatch is AOT-compiled now, so no request
         ever pays a compile on the hot path. ``predict_q_many`` chunks on
         bucket boundaries, so the largest bucket any flush reaches is
         ``bucket_floor(max_batch)`` — warming ``bucket_for(max_batch)``
         would compile a top bucket no flush ever uses when ``max_batch``
-        is not a power of two."""
+        is not a power of two.
+
+        ``cache`` (a :class:`repro.serve.aotcache.AotCache`) turns the
+        warm-up into load-or-compile-and-store: a verified hit boots the
+        model without any XLA compile."""
         max_batch = kw.get("max_batch", 32)
         if warmup:
             # only the bucketed batch executables: the batcher always stacks
             # requests, so the unbatched AOT path is never on its hot path
-            model.warmup_batched(bucket_floor(max_batch))
+            if cache is not None and hasattr(model, "warmup_batched"):
+                model.warmup_batched(bucket_floor(max_batch), cache=cache)
+            else:
+                model.warmup_batched(bucket_floor(max_batch))
         # route-selectable dispatch + output-validity guard, when the model
         # provides them (duck-typed stand-ins without exec_plan still work)
         routed, routes, validate = None, (), None

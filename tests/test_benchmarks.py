@@ -36,12 +36,19 @@ DISPATCH_OK = {
         "median_us": 5.0, "stage_breakdown": BD_OK},
     "serve/sine_dispatch_overhead_vs_legacy": {
         "median_us": None, "ratio": 2.5, "stage_breakdown": BD_OK}}
+COLDSTART_OK = {
+    "serve/sine_coldstart_cold_us": {
+        "median_us": 300000.0, "stage_breakdown": BD_OK},
+    "serve/sine_coldstart_warm_us": {
+        "median_us": 12000.0, "stage_breakdown": BD_OK},
+    "serve/sine_coldstart_warm_vs_cold": {
+        "median_us": None, "ratio": 25.0, "stage_breakdown": BD_OK}}
 
 
 def test_check_bench_gates_names_and_ratios(tmp_path):
     speedup = {"runtime/x_speedup": {"ratio": 2.0, "median_us": None}}
     # all names present, speedup >= 1.0, non-speedup ratios ignored
-    ok = {**speedup, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
+    ok = {**speedup, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK, **COLDSTART_OK,
           "serve/a_vs_b": {"ratio": 1.0, "median_us": None,
                            "stage_breakdown": BD_OK},
           "serve/x_offloop_vs_inline": {"ratio": 1.1, "median_us": None,
@@ -68,7 +75,7 @@ def test_check_bench_gates_offloop_presence_and_slo(tmp_path):
                                  "stage_breakdown": BD_OK}}) == 1
     # ...with it (ratio >= 1.0) the run passes; runtime-only runs are exempt
     assert _run_check_bench(tmp_path, base, {
-        **base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
+        **base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK, **COLDSTART_OK,
         "serve/sine_serial_us": {"median_us": 5.0,
                                  "stage_breakdown": BD_OK},
         **offloop}) == 0
@@ -76,12 +83,12 @@ def test_check_bench_gates_offloop_presence_and_slo(tmp_path):
     # a *_slo record must carry per-class attainment: absent, empty, or
     # non-numeric attainment fails; a complete dict passes
     for bad_att in (None, {}, {"interactive": None}):
-        doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
+        doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK, **COLDSTART_OK,
                "serve/sine_mixed_slo": {"median_us": 3.0,
                                         "slo_attainment": bad_att,
                                         "stage_breakdown": BD_OK}}
         assert _run_check_bench(tmp_path, base, doc) == 1
-    doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
+    doc = {**base, **offloop, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK, **COLDSTART_OK,
            "serve/sine_mixed_slo": {
                "median_us": 3.0,
                "slo_attainment": {"interactive": 0.97, "batch": 0.74},
@@ -100,7 +107,7 @@ def test_check_bench_gates_chaos_floor(tmp_path):
     """Gate 6: serve/ runs must carry the fault-injection record, and its
     interactive goodput must stay >= 0.9."""
     base = {"runtime/x_us": {"median_us": 1.0}}
-    serve = {**base, **TRACE_OK, **DISPATCH_OK,
+    serve = {**base, **TRACE_OK, **DISPATCH_OK, **COLDSTART_OK,
              "serve/sine_serial_us": {"median_us": 5.0,
                                       "stage_breakdown": BD_OK},
              "serve/sine_offloop_vs_inline": {"ratio": 1.2,
@@ -126,7 +133,7 @@ def test_check_bench_gates_stage_breakdown_and_trace(tmp_path):
     tracing A/B record must exist, and its p95 envelope ratio must stay
     <= 1.03."""
     base = {"runtime/x_us": {"median_us": 1.0}}
-    serve = {**base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
+    serve = {**base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK, **COLDSTART_OK,
              "serve/sine_offloop_vs_inline": {"ratio": 1.2,
                                               "median_us": None,
                                               "stage_breakdown": BD_OK}}
@@ -161,7 +168,7 @@ def test_check_bench_gates_dispatch_and_zero_median(tmp_path):
     committed baseline, and no record may write a placeholder 0.0
     median."""
     base = {"runtime/x_us": {"median_us": 1.0}}
-    serve = {**base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK,
+    serve = {**base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK, **COLDSTART_OK,
              "serve/sine_offloop_vs_inline": {"ratio": 1.2,
                                               "median_us": None,
                                               "stage_breakdown": BD_OK}}
@@ -193,6 +200,37 @@ def test_check_bench_gates_dispatch_and_zero_median(tmp_path):
     # carry null, and no real measurement is exactly 0.0 µs
     zeroed = {**serve, "runtime/placeholder_us": {"median_us": 0.0}}
     assert _run_check_bench(tmp_path, base, zeroed) == 1
+
+
+def test_check_bench_gates_coldstart(tmp_path):
+    """Gate 9: serve/ runs must carry the cold-start cache records, the
+    warm-vs-cold boot ratio must stay >= 2.0, and explicit skip records
+    (backends without executable serialization) are exempt."""
+    base = {"runtime/x_us": {"median_us": 1.0}}
+    serve = {**base, **CHAOS_OK, **TRACE_OK, **DISPATCH_OK, **COLDSTART_OK,
+             "serve/sine_offloop_vs_inline": {"ratio": 1.2,
+                                              "median_us": None,
+                                              "stage_breakdown": BD_OK}}
+    assert _run_check_bench(tmp_path, base, serve) == 0
+    # dropping the coldstart family entirely fails (presence gate, same
+    # contract as offloop/chaos/trace/dispatch); runtime-only runs exempt
+    gone = {k: v for k, v in serve.items() if "_coldstart_" not in k}
+    assert _run_check_bench(tmp_path, base, gone) == 1
+    assert _run_check_bench(tmp_path, base, base) == 0
+    # the warm boot paying off less than 2x fails, as does a ratio record
+    # that lost its ratio — the cache stopped earning its complexity
+    for bad_ratio in (1.4, None):
+        doc = {**serve, "serve/sine_coldstart_warm_vs_cold": {
+            "median_us": None, "ratio": bad_ratio,
+            "stage_breakdown": BD_OK}}
+        assert _run_check_bench(tmp_path, base, doc) == 1
+    # explicit skip records are exempt: a backend that cannot serialize
+    # executables reports why instead of failing the suite
+    skipped = {**serve, "serve/sine_coldstart_warm_vs_cold": {
+        "median_us": None, "ratio": None,
+        "derived": "skipped: backend cannot serialize executables (...)",
+        "stage_breakdown": BD_OK}}
+    assert _run_check_bench(tmp_path, base, skipped) == 0
 
 
 @pytest.mark.slow

@@ -38,7 +38,14 @@
 #      no record may carry a placeholder median_us of exactly 0.0 — a
 #      layout, batching, executor-pipelining, priority-scheduling,
 #      arena-model, resilience, observability, or dispatch-overhead
-#      regression fails the Actions gate here
+#      regression fails the Actions gate here; the serve/*_coldstart_*
+#      records must exist with warm-vs-cold >= 2.0 (explicit skips
+#      exempt on backends without executable serialization)
+#   8. cold-start cache selfcheck: the coldstart bench against a tmp
+#      cache dir — the bench itself asserts the second (warm) boot
+#      performs ZERO XLA compiles from a verified cache — and the
+#      stored cache manifests land in results/cache_manifest.json,
+#      uploaded as a CI artifact next to results/audit.json
 #
 #   tools/check.sh [--skip-tests]
 set -euo pipefail
@@ -78,10 +85,17 @@ fi
 
 echo "== benchmarks (--fast) =="
 fresh="$(mktemp -t BENCH_check.XXXXXX.json)"
-trap 'rm -f "$fresh"' EXIT
+cachedir="$(mktemp -d -t aotcache_check.XXXXXX)"
+trap 'rm -f "$fresh"; rm -rf "$cachedir"' EXIT
 python -m benchmarks.run --fast --json-out "$fresh"
 
 echo "== bench regression check (names + speedup ratios >= 1.0) =="
 python tools/check_bench.py BENCH_runtime.json "$fresh"
+
+echo "== cold-start cache selfcheck (tmp cache dir, warm boot must not compile) =="
+# the bench asserts compile_events == 0 on the second boot internally;
+# the manifests it stored become the CI artifact next to results/audit.json
+python -m benchmarks.bench_coldstart --fast --cache-dir "$cachedir" \
+    --manifest-out results/cache_manifest.json
 
 echo "check.sh: all gates passed"

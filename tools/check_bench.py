@@ -75,7 +75,18 @@
    loose enough for shared-runner noise, tight enough that a return to
    pre-teardown per-request cost trips it.
 
-9. **Null-median schema** — no record may carry ``median_us == 0.0``:
+9. **Cold-start cache floor** — a fresh run with ``serve/`` records must
+   include the ``*_coldstart_*`` family (the persistent-AOT-cache boot
+   bench going missing is a name regression even before it lands in a
+   baseline), and the ``serve/sine_coldstart_warm_vs_cold`` ratio must
+   stay >= 2.0: a warm boot from a verified executable cache has to beat
+   a cold compile-everything boot by at least 2x, or the cache stopped
+   paying for its complexity. Records whose ``derived`` starts with
+   ``skipped:`` (backends that cannot serialize executables) are exempt
+   — the explicit-skip contract the ``*_noninterpret`` lanes
+   established.
+
+10. **Null-median schema** — no record may carry ``median_us == 0.0``:
    non-timing records (ratios, skip markers) carry ``median_us: null``,
    and a real measurement of exactly 0.0 µs is impossible. A 0.0 median
    means a bench started writing placeholder zeros into the trajectory,
@@ -102,6 +113,9 @@ TRACE_CEIL = 1.03  # traced/untraced p95 envelope: tracing costs <= 3%
 STAGE_KEYS = ("queue_wait_us", "pad_us", "device_us", "retry_us")
 DISPATCH_MARKER = "_dispatch_overhead_us"
 DISPATCH_CAP = 3.0  # fresh median / queue_wait vs baseline: noise cap
+COLDSTART_MARKER = "_coldstart_"
+COLDSTART_RATIO = "serve/sine_coldstart_warm_vs_cold"
+COLDSTART_FLOOR = 2.0  # warm boot must beat cold boot at least 2x
 
 
 def _is_slo_record(name: str) -> bool:
@@ -275,6 +289,32 @@ def dispatch_violations(baseline: dict, fresh: dict) -> list:
     return bad
 
 
+def missing_coldstart(doc: dict) -> bool:
+    """True when serve/ records exist but the cold-start cache bench
+    records are gone."""
+    names = set(doc)
+    return any(n.startswith("serve/") for n in names) and \
+        not any(COLDSTART_MARKER in n for n in names)
+
+
+def _is_skip(rec) -> bool:
+    derived = rec.get("derived") if isinstance(rec, dict) else None
+    return isinstance(derived, str) and derived.startswith("skipped")
+
+
+def coldstart_violations(doc: dict) -> list:
+    """(name, ratio) when the warm-vs-cold boot ratio is absent or below
+    COLDSTART_FLOOR. Explicit skip records (backend cannot serialize
+    executables) are exempt."""
+    rec = doc.get(COLDSTART_RATIO)
+    if rec is None or _is_skip(rec):
+        return []
+    ratio = rec.get("ratio") if isinstance(rec, dict) else None
+    if not isinstance(ratio, numbers.Real) or ratio < COLDSTART_FLOOR:
+        return [(COLDSTART_RATIO, ratio)]
+    return []
+
+
 def zero_median_violations(doc: dict) -> list:
     """Names of records carrying ``median_us == 0.0`` — the schema
     requires ``null`` for non-timing records, and no real measurement is
@@ -380,6 +420,19 @@ def main(baseline_path: str, fresh_path: str) -> int:
             print(f"  - {name} {what} = {val!r} (cap {lim})",
                   file=sys.stderr)
         rc = 1
+    if missing_coldstart(fresh_doc):
+        print("check_bench: FAIL — serve/ records present but no "
+              f"*{COLDSTART_MARKER}* record: the cold-start cache bench "
+              "went missing", file=sys.stderr)
+        rc = 1
+    bad_cold = coldstart_violations(fresh_doc)
+    if bad_cold:
+        print(f"check_bench: FAIL — warm-vs-cold boot ratio missing or "
+              f"below {COLDSTART_FLOOR}x (the executable cache stopped "
+              f"paying for itself):", file=sys.stderr)
+        for name, ratio in bad_cold:
+            print(f"  - {name} = {ratio!r}", file=sys.stderr)
+        rc = 1
     zero_medians = zero_median_violations(fresh_doc)
     if zero_medians:
         print(f"check_bench: FAIL — {len(zero_medians)} record(s) with "
@@ -404,6 +457,7 @@ def main(baseline_path: str, fresh_path: str) -> int:
         n_serve = sum(1 for n in fresh if n.startswith("serve/"))
         n_trace = sum(1 for n in fresh if TRACE_MARKER in n)
         n_disp = sum(1 for n in fresh if DISPATCH_MARKER in n)
+        n_cold = sum(1 for n in fresh if COLDSTART_MARKER in n)
         print(f"check_bench: OK — all {len(baseline)} baseline names "
               f"present ({len(fresh)} total), {n_gated} speedup ratio(s) "
               f">= 1.0, {n_slo} SLO record(s) carrying per-class "
@@ -412,7 +466,9 @@ def main(baseline_path: str, fresh_path: str) -> int:
               f"serve record(s) with stage breakdowns, {n_trace} "
               f"trace-overhead ratio(s) <= {TRACE_CEIL}, {n_disp} "
               f"dispatch-overhead record(s) within {DISPATCH_CAP}x of "
-              f"baseline, no zero-median placeholders")
+              f"baseline, {n_cold} coldstart record(s) with the warm "
+              f"boot >= {COLDSTART_FLOOR}x faster, no zero-median "
+              f"placeholders")
     return rc
 
 
